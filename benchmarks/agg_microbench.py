@@ -1,0 +1,49 @@
+"""Micro-benchmarks of the aggregation operators themselves (the op the
+Pallas kernel targets): wall time per call on CPU for the XLA-sort path
+and the interpret-mode kernel, across worker counts and gradient sizes.
+Interpret mode is a correctness vehicle, not a perf claim — the perf
+story on real TPUs is in EXPERIMENTS.md §Roofline/§Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    out = []
+    for m in (16, 32):
+        for size in (1 << 16, 1 << 20):
+            x = jnp.asarray(rng.standard_normal((m, size)), jnp.float32)
+            med = jax.jit(ref.median_ref)
+            t_xla = _time(med, x)
+            tm = jax.jit(lambda v: ref.trimmed_mean_ref(v, 0.1))
+            t_trim = _time(tm, x)
+            mean = jax.jit(lambda v: jnp.mean(v, axis=0))
+            t_mean = _time(mean, x)
+            out.append((m, size, t_mean, t_xla, t_trim))
+            if verbose:
+                print(row(f"agg/mean_m{m}_n{size}", t_mean, ""))
+                print(row(f"agg/median_xla_m{m}_n{size}", t_xla,
+                          f"{t_xla / max(t_mean, 1e-9):.1f}x_mean"))
+                print(row(f"agg/trimmed_xla_m{m}_n{size}", t_trim, ""))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Shared helpers for the paper-replication benchmarks.
+
+The paper trains on MNIST; this container is offline, so the benchmarks
+use the synthetic MNIST-analog (10-class Gaussian mixture, 784-d). The
+claims being validated are *relative* — mean aggregation collapses under
+Byzantine workers while median/trimmed-mean recover near-clean accuracy —
+and those transfer across dataset choice (DESIGN.md §Assumptions).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregators import get_aggregator
+from repro.core.attacks import AttackConfig, apply_gradient_attack
+from repro.data.pipeline import DataConfig, make_classification_shards
+from repro.data.synthetic import mnist_analog
+
+
+def distributed_train(
+    loss_fn,
+    acc_fn,
+    init_fn,
+    shards: Dict[str, jax.Array],
+    test: Dict[str, jax.Array],
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+    iters: int = 150,
+    lr: float = 0.5,
+    eval_every: int = 10,
+    subsample: float = 0.0,  # paper CNN experiment: 10% minibatch per iter
+    seed: int = 0,
+):
+    """Algorithm 1 on a classification model; returns (final_acc, curve)."""
+    m = shards["x"].shape[0]
+    params = init_fn(jax.random.PRNGKey(seed))
+    agg = get_aggregator(method, beta)
+    mask = attack.byzantine_mask(m) if attack else None
+    grad_fn = jax.grad(lambda w, x, y: loss_fn(w, {"x": x, "y": y}))
+    per_worker = jax.vmap(grad_fn, in_axes=(None, 0, 0))
+
+    @jax.jit
+    def step(params, key):
+        if subsample > 0:
+            n = shards["x"].shape[1]
+            k = max(1, int(subsample * n))
+            idx = jax.random.randint(key, (m, k), 0, n)
+            xb = jnp.take_along_axis(shards["x"], idx[:, :, None], axis=1)
+            yb = jnp.take_along_axis(shards["y"], idx, axis=1)
+        else:
+            xb, yb = shards["x"], shards["y"]
+        grads = per_worker(params, xb, yb)
+        if attack is not None and attack.alpha > 0 and attack.name in (
+                "sign_flip", "large_value", "mean_shift", "inner_product"):
+            grads = jax.tree.map(lambda g: apply_gradient_attack(attack, g, mask), grads)
+        g = jax.tree.map(agg, grads)
+        return jax.tree.map(lambda p, d: p - lr * d, params, g)
+
+    curve = []
+    key = jax.random.PRNGKey(seed + 1)
+    for it in range(iters):
+        key, sk = jax.random.split(key)
+        params = step(params, sk)
+        if it % eval_every == 0 or it == iters - 1:
+            curve.append((it, float(acc_fn(params, test))))
+    return curve[-1][1], curve
+
+
+def classification_setup(m: int, n_per: int, attack: Optional[AttackConfig], seed: int = 0):
+    cfg = DataConfig(kind="mnist", global_batch=m * n_per, num_workers=m, seed=seed)
+    shards = make_classification_shards(cfg, attack)
+    test = mnist_analog(jax.random.PRNGKey(seed + 1234), 2000)
+    return shards, test
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,80 @@
+"""Statistical-rate scaling experiments (Theorems 1 and 4, Observation 1).
+
+On the Proposition 1 linear-regression setting, measure ||w_T - w*|| while
+sweeping one of (alpha, n, m) and fit log-log slopes:
+
+- error vs alpha (mean_shift attack): ~linear in alpha (slope ~= 1 in the
+  alpha-dominated regime) for median and trimmed mean;
+- error vs n (clean): slope ~= -1/2 (the 1/sqrt(n) factor);
+- error vs m (clean, fixed n): slope ~= -1/2 (the 1/sqrt(nm) averaging) —
+  the median's sub-optimal-regime 1/n term is visible when n < m;
+- lower-bound sanity: measured error stays above Observation 1's
+  Omega(alpha/sqrt(n)) seed curve scaled by a constant.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Timer, row
+from repro.core.attacks import AttackConfig
+from repro.core.robust_gd import RobustGDConfig, run_linreg_experiment
+from repro.core.theory import loglog_slope, lower_bound
+
+KEY = jax.random.PRNGKey(0)
+D, SIGMA = 20, 1.0
+
+
+def _err(method, alpha, n, m, seeds=3, iters=80, shift=5.0):
+    errs = []
+    for s in range(seeds):
+        atk = AttackConfig("mean_shift", alpha=alpha, shift=shift) if alpha > 0 else None
+        cfg = RobustGDConfig(method=method, beta=min(0.45, max(alpha * 1.5, 0.1)),
+                             step_size=0.5, num_iters=iters)
+        e, _ = run_linreg_experiment(jax.random.PRNGKey(s), d=D, n=n, m=m,
+                                     sigma=SIGMA, cfg=cfg, attack=atk)
+        errs.append(float(e))
+    return float(np.mean(errs))
+
+
+def run(verbose: bool = True):
+    out = {}
+    with Timer() as t:
+        # 1) error vs alpha
+        alphas = [0.1, 0.2, 0.3, 0.4]
+        for method in ("median", "trimmed_mean"):
+            errs = [_err(method, a, n=500, m=20) for a in alphas]
+            slope = loglog_slope(alphas, errs)
+            out[f"alpha_slope_{method}"] = (slope, errs)
+        # 2) error vs n (clean)
+        ns = [100, 400, 1600, 6400]
+        errs_n = [_err("median", 0.0, n=n, m=10) for n in ns]
+        out["n_slope_median"] = (loglog_slope(ns, errs_n), errs_n)
+        # 3) error vs m (clean)
+        ms = [5, 10, 20, 40]
+        errs_m = [_err("median", 0.0, n=500, m=m) for m in ms]
+        out["m_slope_median"] = (loglog_slope(ms, errs_m), errs_m)
+        # 4) lower bound comparison at alpha=0.2
+        e = _err("trimmed_mean", 0.2, n=500, m=20)
+        lb = lower_bound(0.2, 500, 20, d=1, sigma=SIGMA)
+        out["lower_bound"] = (e, lb)
+
+    if verbose:
+        dt = t.dt * 1e6 / 10
+        for method in ("median", "trimmed_mean"):
+            s, errs = out[f"alpha_slope_{method}"]
+            print(row(f"rates/err_vs_alpha_{method}", dt,
+                      f"slope={s:.2f} errs=" + "/".join(f"{e:.3f}" for e in errs)))
+        s, errs = out["n_slope_median"]
+        print(row("rates/err_vs_n_median", dt,
+                  f"slope={s:.2f} (theory -0.5) errs=" + "/".join(f"{e:.4f}" for e in errs)))
+        s, errs = out["m_slope_median"]
+        print(row("rates/err_vs_m_median", dt,
+                  f"slope={s:.2f} (theory -0.5) errs=" + "/".join(f"{e:.4f}" for e in errs)))
+        e, lb = out["lower_bound"]
+        print(row("rates/above_lower_bound", dt, f"err={e:.4f} >= Omega={lb:.4f}: {e >= lb}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness: one entry per paper table/figure + rate scalings +
+aggregation micro-bench. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only table2,rates
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    failed = []
+    for suite in only:
+        try:
+            if suite == "table2":
+                from benchmarks import table2_logreg as mod
+            elif suite == "table3":
+                from benchmarks import table3_cnn as mod
+            elif suite == "table4":
+                from benchmarks import table4_one_round as mod
+            elif suite == "fig1":
+                from benchmarks import fig1_convergence as mod
+            elif suite == "rates":
+                from benchmarks import rates_scaling as mod
+            elif suite == "matrix":
+                from benchmarks import robustness_matrix as mod
+            elif suite == "agg":
+                from benchmarks import agg_microbench as mod
+            else:
+                raise ValueError(f"unknown suite {suite}")
+            mod.run(verbose=True)
+        except Exception:  # noqa: BLE001
+            failed.append(suite)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

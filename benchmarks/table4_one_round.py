@@ -1,0 +1,54 @@
+"""Paper Table 4: one-round algorithm, m=10, random-label alpha=0.1.
+
+Paper numbers (MNIST logistic regression): mean/clean 91.8,
+mean/attacked 83.7, median/attacked 89.0.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Timer, classification_setup, row
+from repro.core.attacks import AttackConfig
+from repro.core.one_round import OneRoundConfig, make_gd_local_solver, one_round
+from repro.models.paper_models import init_logreg, logreg_accuracy, logreg_loss
+
+M, N_PER, ALPHA = 10, 500, 0.1
+
+
+def run(verbose: bool = True):
+    atk = AttackConfig("random_label", alpha=ALPHA)
+    # Byzantine workers may also send ARBITRARY model vectors (the paper's
+    # threat model is strictly stronger than its random-label experiment);
+    # the weights attack shows the breakdown the median prevents. Sign-flip
+    # is used because a constant-value vector is argmax-invariant for
+    # logistic regression (it shifts every class logit equally).
+    atk_w = AttackConfig("sign_flip", alpha=ALPHA, scale=15.0)
+    shards_clean, test = classification_setup(M, N_PER, None)
+    shards_atk, _ = classification_setup(M, N_PER, atk)
+    w0 = init_logreg(jax.random.PRNGKey(0))
+    solver = make_gd_local_solver(
+        lambda w, b: logreg_loss(w, {"x": b["x"], "y": b["y"]}), w0,
+        steps=150, lr=0.5)
+    results = {}
+    with Timer() as t:
+        for name, shards, method, watk in [
+            ("mean_clean", shards_clean, "mean", None),
+            ("mean_attacked", shards_atk, "mean", None),
+            ("median_attacked", shards_atk, "median", None),
+            ("mean_weights_attacked", shards_clean, "mean", atk_w),
+            ("median_weights_attacked", shards_clean, "median", atk_w),
+        ]:
+            w = one_round(solver, shards, OneRoundConfig(method), attack=watk)
+            results[name] = float(logreg_accuracy(w, test))
+    ok = (results["mean_clean"] - results["mean_attacked"] > 0.01
+          and results["median_weights_attacked"] - results["mean_weights_attacked"] > 0.2
+          and results["median_attacked"] > results["mean_attacked"] - 0.03)
+    if verbose:
+        for k, v in results.items():
+            print(row(f"table4/{k}_acc", t.dt * 1e6 / 5, f"{v*100:.1f}%"))
+        print(row("table4/claim_holds", t.dt * 1e6, str(ok)))
+    return results, ok
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Quickstart: Byzantine-robust distributed training in 60 lines.
+
+Simulates the paper's setting on CPU: m=8 worker machines (2 Byzantine,
+sending sign-flipped gradients), linear regression with Rademacher
+features (Proposition 1), comparing mean / median / trimmed-mean
+aggregation — the paper's core claim reproduced end to end.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.attacks import AttackConfig
+from repro.core.robust_gd import RobustGDConfig, run_linreg_experiment
+from repro.core.theory import c_eps, median_rate
+
+KEY = jax.random.PRNGKey(0)
+N, M, D, SIGMA = 500, 8, 20, 0.5
+ATTACK = AttackConfig("sign_flip", alpha=0.25, scale=10.0)
+
+
+def main():
+    print(f"m={M} workers, n={N} samples each, d={D}, "
+          f"{ATTACK.num_byzantine(M)} Byzantine ({ATTACK.name})")
+    print(f"paper rate  ~ C_eps * (a/sqrt(n) + 1/sqrt(nm) + 1/n) "
+          f"= {c_eps(1/6) * median_rate(ATTACK.alpha, N, M):.4f}\n")
+    for method in ("mean", "median", "trimmed_mean"):
+        cfg = RobustGDConfig(method=method, beta=0.3, step_size=0.5, num_iters=100)
+        err, traj = run_linreg_experiment(
+            KEY, d=D, n=N, m=M, sigma=SIGMA, cfg=cfg, attack=ATTACK)
+        status = "ROBUST" if float(err) < 0.2 else "BROKEN"
+        print(f"{method:13s} ||w - w*|| = {float(err):8.4f}   [{status}]")
+
+
+if __name__ == "__main__":
+    main()

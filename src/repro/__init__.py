@@ -1,0 +1,8 @@
+"""repro — Byzantine-Robust Distributed Learning (Yin et al., ICML 2018) in JAX.
+
+A production-grade multi-pod training/inference framework whose gradient
+all-reduce is replaced by the paper's coordinate-wise median / trimmed-mean
+robust aggregation, plus beyond-paper bandwidth-optimal variants.
+"""
+
+__version__ = "1.0.0"

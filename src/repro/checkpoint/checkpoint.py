@@ -1,0 +1,69 @@
+"""npz-based checkpointing (orbax is not available offline).
+
+Saves a pytree (params / optimizer state / step) to a directory:
+- ``manifest.json``: treedef paths, shapes, dtypes, step metadata;
+- ``arrays.npz``: flat leaf arrays keyed by path.
+
+Arrays are gathered to host before saving (fine single-host; a multi-host
+deployment would swap this module for orbax — the interface is the same).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+_NUMPY_NATIVE = set("?bhilqpBHILQPefdgFDGO")
+
+
+def save(ckpt_dir: str, tree, step: int = 0, extra: Optional[dict] = None) -> None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    dtypes = {k: str(v.dtype) for k, v in arrays.items()}
+    # npz can't store ml_dtypes (bfloat16, fp8); widen to f32 on disk —
+    # lossless for bf16 — and restore to the recorded dtype.
+    arrays = {k: (v if v.dtype.char in _NUMPY_NATIVE else v.astype(np.float32))
+              for k, v in arrays.items()}
+    np.savez(os.path.join(ckpt_dir, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": {k: {"shape": list(v.shape), "dtype": dtypes[k]} for k, v in arrays.items()},
+    }
+    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(ckpt_dir: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    flat_like = _flatten_with_paths(like)
+    restored = {}
+    for key, tmpl in flat_like.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {tmpl.shape}")
+        restored[key] = arr.astype(tmpl.dtype)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten_with_paths(like).keys())
+    new_leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]

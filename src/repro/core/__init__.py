@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — Byzantine-robust aggregation.
+
+- aggregators: coordinate-wise median / trimmed-mean / mean (Defs 1-2)
+- distributed: robust cross-worker collective reductions (shard_map)
+- attacks: Byzantine attack models
+- robust_gd: Algorithm 1 (robust distributed GD)
+- one_round: Algorithm 2 (robust one-round)
+- theory: statistical-rate formulas (Theorems 1/4, Observation 1)
+"""
+from repro.core import aggregators, attacks, distributed, one_round, robust_gd, theory  # noqa: F401
+from repro.core.aggregators import (  # noqa: F401
+    coordinate_mean,
+    coordinate_median,
+    coordinate_trimmed_mean,
+    get_aggregator,
+)
+from repro.core.attacks import AttackConfig  # noqa: F401
+from repro.core.robust_gd import RobustGDConfig  # noqa: F401
+from repro.core.one_round import OneRoundConfig  # noqa: F401

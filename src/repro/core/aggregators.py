@@ -1,0 +1,148 @@
+"""Coordinate-wise robust aggregators (paper Definitions 1 and 2).
+
+All functions aggregate a stack of per-worker vectors along ``axis=0``:
+``x`` has shape ``(m, ...)`` where ``m`` is the number of worker machines.
+
+These are the mathematical building blocks; the distributed (collective)
+versions live in :mod:`repro.core.distributed`, and the Pallas TPU kernel
+in :mod:`repro.kernels`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+AggFn = Callable[[jax.Array], jax.Array]
+
+
+def coordinate_mean(x: jax.Array) -> jax.Array:
+    """Plain mean over the worker axis (the non-robust baseline)."""
+    return jnp.mean(x, axis=0)
+
+
+def coordinate_median(x: jax.Array) -> jax.Array:
+    """Coordinate-wise median over the worker axis (paper Definition 1).
+
+    For even ``m`` this is the average of the two middle order statistics,
+    matching ``jnp.median``.
+    """
+    m = x.shape[0]
+    s = jnp.sort(x, axis=0)
+    if m % 2 == 1:
+        return s[m // 2]
+    lo = s[m // 2 - 1]
+    hi = s[m // 2]
+    # Average in f32 to avoid bf16 midpoint artifacts, cast back.
+    return ((lo.astype(jnp.float32) + hi.astype(jnp.float32)) * 0.5).astype(x.dtype)
+
+
+def coordinate_trimmed_mean(x: jax.Array, beta: float) -> jax.Array:
+    """Coordinate-wise β-trimmed mean (paper Definition 2).
+
+    Removes the largest and smallest ``floor(beta * m)`` entries per
+    coordinate and averages the rest. ``beta`` must be in [0, 1/2).
+    """
+    if not 0.0 <= beta < 0.5:
+        raise ValueError(f"beta must be in [0, 1/2), got {beta}")
+    m = x.shape[0]
+    b = int(beta * m)
+    if 2 * b >= m:
+        raise ValueError(f"trim count 2*{b} >= m={m}")
+    if b == 0:
+        return coordinate_mean(x)
+    s = jnp.sort(x, axis=0)
+    kept = s[b : m - b]
+    return jnp.mean(kept.astype(jnp.float32), axis=0).astype(x.dtype)
+
+
+def coordinate_quantile(x: jax.Array, q: float) -> jax.Array:
+    """Coordinate-wise empirical q-quantile (nearest-rank, no interpolation)."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"q must be in [0, 1], got {q}")
+    m = x.shape[0]
+    s = jnp.sort(x, axis=0)
+    idx = min(m - 1, int(round(q * (m - 1))))
+    return s[idx]
+
+
+def geometric_median(x: jax.Array, iters: int = 8, eps: float = 1e-6) -> jax.Array:
+    """Geometric median over the worker axis via Weiszfeld iterations.
+
+    Beyond-paper baseline: the *vector* median used by the
+    median-of-means literature the paper builds on (Minsker 2015; also
+    Blanchard et al.'s geometric-aggregation family). Unlike the
+    coordinate-wise median it is rotation-equivariant, but it does not
+    decompose across coordinates, so it cannot use the bucketed/FSDP
+    collective schedules — gather-only (see core.distributed).
+    """
+    xf = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    y = jnp.mean(xf, axis=0)
+
+    def step(y, _):
+        d = jnp.linalg.norm(xf - y[None, :], axis=1)
+        w = 1.0 / jnp.maximum(d, eps)
+        y_new = jnp.sum(w[:, None] * xf, axis=0) / jnp.sum(w)
+        return y_new, None
+
+    y, _ = jax.lax.scan(step, y, None, length=iters)
+    return y.reshape(x.shape[1:]).astype(x.dtype)
+
+
+def krum(x: jax.Array, num_byzantine: int = 0, multi: int = 1) -> jax.Array:
+    """Krum / multi-Krum (Blanchard et al., 2017) — the Byzantine-robust
+    aggregation baseline the paper positions itself against.
+
+    Each worker i is scored by the sum of squared distances to its
+    m − q − 2 nearest neighbours (q = declared Byzantine count); Krum
+    selects the lowest-scoring worker's vector (multi-Krum averages the
+    ``multi`` best). Unlike the paper's coordinate-wise rules, Krum is a
+    selection rule over whole gradients — O(m²·d), gather-only, and needs
+    q as input; the paper's complaint is that its statistical error does
+    not attain the optimal rates. Implemented for the comparison
+    benchmarks (benchmarks/robustness_matrix.py).
+    """
+    m = x.shape[0]
+    q = min(num_byzantine, max(0, (m - 3) // 2))
+    k = max(1, m - q - 2)
+    flat = x.reshape(m, -1).astype(jnp.float32)
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (flat @ flat.T)  # (m, m)
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf))
+    # score_i = sum of k smallest distances
+    neg_top, _ = jax.lax.top_k(-d2, k)
+    scores = -jnp.sum(neg_top, axis=1)
+    _, best = jax.lax.top_k(-scores, min(multi, m))
+    sel = jnp.mean(flat[best], axis=0)
+    return sel.reshape(x.shape[1:]).astype(x.dtype)
+
+
+def get_aggregator(method: str, beta: float = 0.1) -> AggFn:
+    """Return an aggregation function ``(m, ...) -> (...)`` by name.
+
+    ``method`` is one of ``mean`` | ``median`` | ``trimmed_mean``.
+    """
+    if method == "mean":
+        return coordinate_mean
+    if method == "median":
+        return coordinate_median
+    if method == "trimmed_mean":
+        return functools.partial(coordinate_trimmed_mean, beta=beta)
+    if method == "geometric_median":
+        return geometric_median
+    if method == "krum":
+        # beta doubles as the declared Byzantine fraction for Krum
+        return lambda x: krum(x, num_byzantine=int(beta * x.shape[0]))
+    if method == "multi_krum":
+        return lambda x: krum(x, num_byzantine=int(beta * x.shape[0]),
+                              multi=max(1, x.shape[0] // 2))
+    raise ValueError(f"unknown aggregation method: {method!r}")
+
+
+def tree_aggregate(grads_stacked, method: str, beta: float = 0.1):
+    """Apply a coordinate-wise aggregator leaf-wise to a pytree of
+    per-worker-stacked gradients (each leaf has leading worker axis m)."""
+    agg = get_aggregator(method, beta)
+    return jax.tree.map(agg, grads_stacked)

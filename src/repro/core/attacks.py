@@ -1,0 +1,128 @@
+"""Byzantine attack models.
+
+The paper's threat model: an α-fraction of the m worker machines send
+*arbitrary* vectors to the master, possibly colluding and with full
+knowledge of the data and algorithm. We implement both kinds of attack the
+paper uses in its experiments (data corruption) plus standard gradient-space
+attacks from the Byzantine-ML literature, so that robustness can be stress
+tested beyond label flips.
+
+Two interfaces:
+
+- **data attacks** operate on a batch ``{x, y}`` (per-worker shard);
+- **gradient attacks** operate on the stacked per-worker gradient matrix
+  ``(m, ...)`` together with a boolean Byzantine mask ``(m,)`` — rows of
+  Byzantine workers are replaced. This is applied at the aggregation point,
+  where every device can see the gathered per-worker rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """Which attack to apply, and to which workers.
+
+    ``alpha`` is the Byzantine fraction; workers ``0 .. ceil(alpha*m)-1``
+    are Byzantine (the choice of *which* workers is immaterial to
+    coordinate-wise aggregators, which are permutation invariant).
+    """
+
+    name: str = "none"  # none|label_flip|random_label|sign_flip|large_value|mean_shift|inner_product
+    alpha: float = 0.0
+    scale: float = 100.0  # magnitude used by large_value
+    num_classes: int = 10  # used by label attacks
+    shift: float = 1.0  # used by mean_shift
+
+    def num_byzantine(self, m: int) -> int:
+        import math
+
+        return min(m - 1, math.ceil(self.alpha * m)) if self.alpha > 0 else 0
+
+    def byzantine_mask(self, m: int) -> jax.Array:
+        q = self.num_byzantine(m)
+        return jnp.arange(m) < q
+
+
+# ---------------------------------------------------------------- data space
+
+
+def label_flip(y: jax.Array, num_classes: int = 10) -> jax.Array:
+    """The paper's first experiment: replace every label y with (C-1) - y."""
+    return (num_classes - 1) - y
+
+
+def random_label(y: jax.Array, key: jax.Array, num_classes: int = 10) -> jax.Array:
+    """The paper's one-round experiment: iid uniform labels."""
+    return jax.random.randint(key, y.shape, 0, num_classes, dtype=y.dtype)
+
+
+def apply_data_attack(cfg: AttackConfig, batch: dict, is_byzantine, key: Optional[jax.Array] = None) -> dict:
+    """Corrupt the labels of a (per-worker) batch if ``is_byzantine``.
+
+    ``is_byzantine`` may be a traced boolean scalar (inside shard_map it is
+    derived from ``jax.lax.axis_index``).
+    """
+    if cfg.name == "none" or cfg.alpha == 0.0:
+        return batch
+    y = batch["y"]
+    if cfg.name == "label_flip":
+        y_bad = label_flip(y, cfg.num_classes)
+    elif cfg.name == "random_label":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        y_bad = random_label(y, key, cfg.num_classes)
+    else:
+        # gradient-space attacks don't touch the data
+        return batch
+    y_new = jnp.where(is_byzantine, y_bad, y)
+    return {**batch, "y": y_new}
+
+
+# ------------------------------------------------------------ gradient space
+
+
+def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array) -> jax.Array:
+    """Replace Byzantine rows of a stacked per-worker array ``(m, ...)``.
+
+    ``mask``: bool ``(m,)`` — True rows are Byzantine. Honest statistics
+    (mean of honest rows) are available to the attacker, matching the
+    omniscient threat model.
+    """
+    if cfg.name in ("none", "label_flip", "random_label") or cfg.alpha == 0.0:
+        return stacked
+    m = stacked.shape[0]
+    bshape = (m,) + (1,) * (stacked.ndim - 1)
+    maskb = mask.reshape(bshape)
+    n_honest = jnp.maximum(1, m - jnp.sum(mask))
+    honest_mean = jnp.sum(jnp.where(maskb, 0, stacked), axis=0) / n_honest
+
+    if cfg.name == "sign_flip":
+        bad = -cfg.scale * honest_mean
+    elif cfg.name == "large_value":
+        bad = jnp.full_like(honest_mean, cfg.scale)
+    elif cfg.name == "alie":
+        # "A Little Is Enough" (Baruch et al. 2019): colluding workers
+        # shift each coordinate by z_max standard deviations — the largest
+        # perturbation that still hides inside the honest spread, designed
+        # to defeat median/trimmed-mean-style defenses maximally.
+        # (cfg.shift plays the role of z_max — the number of honest
+        # standard deviations the colluders shift by)
+        honest_var = jnp.sum(jnp.where(maskb, 0, (stacked - honest_mean) ** 2), axis=0) / n_honest
+        bad = honest_mean - cfg.shift * jnp.sqrt(honest_var + 1e-12)
+    elif cfg.name == "mean_shift":
+        # omniscient colluding attack: all Byzantine rows push the
+        # coordinate-wise statistics by a constant shift of the honest mean
+        honest_sq = jnp.sum(jnp.where(maskb, 0, (stacked - honest_mean) ** 2), axis=0) / n_honest
+        bad = honest_mean + cfg.shift * jnp.sqrt(honest_sq + 1e-12)
+    elif cfg.name == "inner_product":
+        # push opposite to the honest mean direction, scaled to its norm
+        bad = -honest_mean
+    else:
+        raise ValueError(f"unknown gradient attack {cfg.name!r}")
+    return jnp.where(maskb, jnp.broadcast_to(bad, stacked.shape), stacked)

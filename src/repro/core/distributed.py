@@ -1,0 +1,320 @@
+"""Distributed robust reductions — the paper's aggregation as collectives.
+
+These functions run *inside* a ``jax.shard_map`` body whose manual axes are
+the worker axes (``('data',)`` single-pod, ``('pod','data')`` multi-pod).
+Each data-parallel group is one "worker machine" of the paper; the model
+axis stays automatic (GSPMD).
+
+Three exact strategies (identical estimator, different collective schedule):
+
+``gather``    paper-faithful. Every device all-gathers the m per-worker
+              gradients for its model shard and applies the coordinate-wise
+              aggregator locally. Collective bytes ≈ m·|g| per device.
+
+``bucketed``  beyond-paper. The gradient is flattened and split into m
+              equal buckets; an ``all_to_all`` routes bucket j of every
+              worker to worker j, which aggregates its bucket over the m
+              rows; an ``all_gather`` reassembles the full aggregated
+              gradient. Bytes ≈ 2·|g| per device — the same volume as a
+              plain all-reduce, i.e. Byzantine robustness at (almost) no
+              extra bandwidth. Exact because coordinate-wise aggregators
+              are embarrassingly parallel across coordinates.
+
+``rs``        like ``bucketed`` but *leaves the result scattered* (a
+              "robust reduce-scatter"): used by the FSDP integration where
+              each worker only updates its own parameter shard.
+
+One approximate strategy:
+
+``hierarchical``  median-of-medians across pods (aggregate within pod,
+              then across pods). Cheaper DCN traffic but a *different*
+              estimator (documented in DESIGN.md); off by default.
+
+Byzantine simulation: gradient-space attacks are applied where per-worker
+rows are visible, i.e. after the gather / all_to_all, using the row index
+(= source worker id) against the attack's Byzantine mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators
+from repro.core.attacks import AttackConfig, apply_gradient_attack
+
+
+def axis_size(axis_names: Sequence[str]) -> int:
+    s = 1
+    for a in axis_names:
+        s *= jax.lax.axis_size(a)
+    return s
+
+
+def worker_index(axis_names: Sequence[str]) -> jax.Array:
+    """Flat worker id over the (possibly multiple) worker mesh axes.
+
+    Row-major over ``axis_names`` — consistent with how ``all_gather``
+    tiles multiple axes.
+    """
+    idx = jnp.int32(0)
+    for a in axis_names:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _maybe_attack(stacked: jax.Array, attack: Optional[AttackConfig], m: int) -> jax.Array:
+    if attack is None or attack.name == "none" or attack.alpha == 0.0:
+        return stacked
+    mask = attack.byzantine_mask(m)
+    return apply_gradient_attack(attack, stacked, mask)
+
+
+# --------------------------------------------------------------------------
+# gather strategy (paper-faithful Algorithm 1 aggregation)
+# --------------------------------------------------------------------------
+
+
+def robust_gather_agg(
+    g,
+    axis_names: Sequence[str],
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+    agg_dtype=None,
+):
+    """All-gather per-worker gradients over the worker axes and aggregate.
+
+    ``g``: pytree of local gradient leaves. Returns the aggregated pytree
+    (replicated across worker axes).
+    """
+    m = axis_size(axis_names)
+
+    def agg_leaf(leaf):
+        stacked = jax.lax.all_gather(leaf, axis_names, axis=0, tiled=False)
+        stacked = stacked.reshape((m,) + leaf.shape)
+        if agg_dtype is not None:
+            stacked = stacked.astype(agg_dtype)
+        stacked = _maybe_attack(stacked, attack, m)
+        out = aggregators.get_aggregator(method, beta)(stacked)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(agg_leaf, g)
+
+
+# --------------------------------------------------------------------------
+# bucketed strategy (beyond-paper: robust "all-reduce" via all_to_all)
+# --------------------------------------------------------------------------
+
+
+def _flatten_tree(g) -> Tuple[jax.Array, list]:
+    leaves, treedef = jax.tree.flatten(g)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,))
+    meta = [(l.shape, l.dtype, l.size) for l in leaves]
+    return flat, [treedef, meta]
+
+
+def _unflatten_tree(flat: jax.Array, aux) -> "jax.tree_util.PyTreeDef":
+    treedef, meta = aux
+    leaves = []
+    off = 0
+    for shape, dtype, size in meta:
+        leaves.append(flat[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _robust_scatter_flat(
+    flat: jax.Array,
+    axis_names: Sequence[str],
+    method: str,
+    beta: float,
+    attack: Optional[AttackConfig],
+    agg_dtype,
+) -> Tuple[jax.Array, int]:
+    """Core of the bucketed strategies.
+
+    Input: local flat gradient (G,). Output: this worker's aggregated
+    bucket (ceil(G/m),) — coordinates [j*bs : (j+1)*bs] for worker j —
+    plus the original size for unpadding by the caller.
+    """
+    axis_names = tuple(axis_names)
+    m = axis_size(axis_names)
+    sizes = tuple(jax.lax.axis_size(a) for a in axis_names)
+    size = flat.shape[0]
+    bs = -(-size // m)  # ceil
+    pad = bs * m - size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    # Buckets laid out per worker axis: bucket (i_0, .., i_{k-1}) goes to the
+    # worker at that mesh coordinate (flat index row-major = all_gather order).
+    buckets = flat.reshape(sizes + (bs,))
+    # all_to_all each worker axis on its own bucket dim: afterwards, entry
+    # (j_0, .., j_{k-1}) is worker (j_0, .., j_{k-1})'s copy of MY bucket.
+    rows = buckets
+    for dim, a in enumerate(axis_names):
+        rows = jax.lax.all_to_all(rows, a, split_axis=dim, concat_axis=dim, tiled=True)
+    rows = rows.reshape(m, bs)
+    # rows: (m, bs) — row i is (flat) worker i's version of my bucket
+    if agg_dtype is not None:
+        rows = rows.astype(agg_dtype)
+    rows = _maybe_attack(rows, attack, m)
+    out = aggregators.get_aggregator(method, beta)(rows)
+    return out.astype(flat.dtype), size
+
+
+def robust_bucketed_agg(
+    g,
+    axis_names: Sequence[str],
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+    agg_dtype=None,
+    granularity: str = "leaf",
+):
+    """Exact robust aggregation with all-reduce-like byte volume.
+
+    per leaf (or the flat concat): all_to_all buckets → aggregate own
+    bucket → all_gather. Returns the full aggregated pytree (replicated
+    across worker axes).
+
+    ``granularity='leaf'`` (default) buckets each gradient leaf
+    independently — no concat copy of the full gradient, which matters at
+    100B+ scale (EXPERIMENTS.md §Perf iteration 1 found the flat concat
+    multiplied grok-1's HBM traffic ~4×). ``'flat'`` keeps the original
+    single-bucket-space formulation (fewer, larger collectives — fine for
+    small models).
+    """
+    if granularity == "leaf":
+        def agg_leaf(leaf):
+            flat = leaf.reshape(-1)
+            mine, size = _robust_scatter_flat(flat, axis_names, method, beta,
+                                              attack, agg_dtype)
+            full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)
+            return full[:size].reshape(leaf.shape).astype(leaf.dtype)
+
+        return jax.tree.map(agg_leaf, g)
+    flat, aux = _flatten_tree(g)
+    mine, size = _robust_scatter_flat(flat, axis_names, method, beta, attack, agg_dtype)
+    full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)
+    full = full[:size]
+    return _unflatten_tree(full, aux)
+
+
+def robust_reduce_scatter(
+    flat: jax.Array,
+    axis_names: Sequence[str],
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+    agg_dtype=None,
+) -> jax.Array:
+    """Robust replacement for ``psum_scatter`` on a flat vector.
+
+    Returns only this worker's aggregated bucket (padded bucket size).
+    Used by the robust-FSDP parameter gather's backward pass.
+    """
+    out, _ = _robust_scatter_flat(flat, axis_names, method, beta, attack, agg_dtype)
+    return out
+
+
+# --------------------------------------------------------------------------
+# hierarchical strategy (approximate: median-of-medians across pods)
+# --------------------------------------------------------------------------
+
+
+def robust_hierarchical_agg(
+    g,
+    inner_axis: str,
+    outer_axis: str,
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+):
+    """Two-level aggregation: within ``inner_axis`` (ICI), then across
+    ``outer_axis`` (DCN). NOTE: median-of-medians is a different estimator
+    from the global median — documented in DESIGN.md; use for DCN savings
+    only when the per-pod Byzantine fraction is controlled.
+    """
+    inner = robust_gather_agg(g, (inner_axis,), method, beta, attack)
+    return robust_gather_agg(inner, (outer_axis,), method, beta, attack=None)
+
+
+# --------------------------------------------------------------------------
+# robust FSDP parameter gather (custom_vjp)
+# --------------------------------------------------------------------------
+
+
+def make_robust_param_gather_dim(
+    axis_names: Sequence[str],
+    dim: int,
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+):
+    """Like :func:`make_robust_param_gather` but gathers/scatters along an
+    arbitrary tensor dimension ``dim`` (the per-leaf FSDP dim)."""
+    axis_names = tuple(axis_names)
+
+    @jax.custom_vjp
+    def gather(w_shard: jax.Array) -> jax.Array:
+        return jax.lax.all_gather(w_shard, axis_names, axis=dim, tiled=True)
+
+    def fwd(w_shard):
+        return gather(w_shard), None
+
+    def bwd(_, ct):
+        moved = jnp.moveaxis(ct, dim, 0)
+        flat = moved.reshape(-1)
+        shard_flat = robust_reduce_scatter(flat, axis_names, method, beta, attack)
+        m = 1
+        for a in axis_names:
+            m *= jax.lax.axis_size(a)
+        shard_shape = (moved.shape[0] // m,) + moved.shape[1:]
+        shard = jnp.moveaxis(shard_flat.reshape(shard_shape), 0, dim)
+        return (shard,)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def make_robust_param_gather(
+    axis_names: Sequence[str],
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+):
+    """Return ``gather(w_shard) -> w_full`` whose backward pass is a
+    *robust reduce-scatter* instead of the usual ``psum_scatter``.
+
+    Forward: all-gather the FSDP-sharded flat parameter shard over the
+    worker axes. Backward: each worker's full-gradient cotangent is
+    bucketed with ``all_to_all`` and aggregated coordinate-wise, so the
+    parameter-shard update each worker applies is the exact paper
+    estimator over the m per-worker gradients.
+    """
+    axis_names = tuple(axis_names)
+
+    @jax.custom_vjp
+    def gather(w_shard: jax.Array) -> jax.Array:
+        return jax.lax.all_gather(w_shard, axis_names, axis=0, tiled=True)
+
+    def fwd(w_shard):
+        return gather(w_shard), None
+
+    def bwd(_, ct):
+        flat = ct.reshape(-1)
+        shard = robust_reduce_scatter(flat, axis_names, method, beta, attack)
+        m = 1
+        for a in axis_names:
+            m *= jax.lax.axis_size(a)
+        # ct has shape (m * shard_rows, ...) == w_full; our shard is rows
+        # [j*shard_rows : (j+1)*shard_rows]. robust_reduce_scatter returned
+        # exactly those coordinates (flattened), so reshape back.
+        shard_shape = (ct.shape[0] // m,) + ct.shape[1:]
+        return (shard.reshape(shard_shape),)
+
+    gather.defvjp(fwd, bwd)
+    return gather

@@ -1,0 +1,124 @@
+"""Statistical-rate formulas from the paper, used to validate experiments.
+
+Implements:
+- ``c_eps``      — C_ε of eq. (4);
+- ``delta_median``   — Δ of eq. (3) (median GD, Theorem 1);
+- ``delta_trimmed``  — Δ' of eq. (5) (trimmed-mean GD, Theorem 4);
+- ``lower_bound``    — Observation 1's Ω(α/√n + √(d/nm));
+- ``median_condition`` — feasibility condition eq. (2);
+- helpers for fitting empirical error curves against the predicted
+  scalings (log-log slope fits used by the rate benchmarks).
+"""
+from __future__ import annotations
+
+import math
+
+
+def _phi_inv(p: float) -> float:
+    """Inverse standard normal CDF (Acklam's rational approximation).
+
+    scipy is not installed in this container; Acklam's approximation has
+    |relative error| < 1.15e-9 which is far below anything we need.
+    """
+    if not 0.0 < p < 1.0:
+        raise ValueError("p must be in (0,1)")
+    a = [-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00]
+    b = [-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    if p < plow:
+        q = math.sqrt(-2 * math.log(p))
+        return (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+               ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if p > phigh:
+        q = math.sqrt(-2 * math.log(1 - p))
+        return -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+               ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    q = p - 0.5
+    r = q * q
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
+           (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+
+
+def c_eps(eps: float) -> float:
+    """C_ε = √(2π) · exp(Φ⁻¹(1-ε)² / 2)  (paper eq. 4). C_{1/6} ≈ 4."""
+    z = _phi_inv(1.0 - eps)
+    return math.sqrt(2.0 * math.pi) * math.exp(0.5 * z * z)
+
+
+BERRY_ESSEEN = 0.4748  # Shevtsova (2014) constant used throughout the paper
+
+
+def median_condition(alpha: float, n: int, m: int, d: int, S: float,
+                     LhatD: float = 1.0) -> float:
+    """LHS of eq. (2): α + √(d·log(1+nm·L̂D)/(m(1-α))) + 0.4748·S/√n.
+
+    Feasible (for some ε>0) iff the returned value < 1/2.
+    """
+    log_term = math.log(1.0 + n * m * LhatD)
+    return alpha + math.sqrt(d * log_term / (m * (1.0 - alpha))) + BERRY_ESSEEN * S / math.sqrt(n)
+
+
+def delta_median(alpha: float, n: int, m: int, d: int, V: float, S: float,
+                 eps: float = 1.0 / 6.0, LhatD: float = 1.0) -> float:
+    """Δ of eq. (3) for median GD (up to the hidden universal constant):
+
+        C_ε · V · ( α/√n + √(d·log(nm·L̂D)/(nm)) + S/n )
+    """
+    log_term = math.log(max(math.e, n * m * LhatD))
+    return c_eps(eps) * V * (
+        alpha / math.sqrt(n)
+        + math.sqrt(d * log_term / (n * m))
+        + S / n
+    )
+
+
+def delta_trimmed(beta: float, n: int, m: int, d: int, v: float,
+                  eps: float = 1.0 / 6.0, LhatD: float = 1.0) -> float:
+    """Δ' of eq. (5) for trimmed-mean GD (up to universal constants):
+
+        (v·d/ε) · ( β/√n + 1/√(nm) ) · √log(nm·L̂D)
+    """
+    log_term = math.log(max(math.e, n * m * LhatD))
+    return (v * d / eps) * (beta / math.sqrt(n) + 1.0 / math.sqrt(n * m)) * math.sqrt(log_term)
+
+
+def lower_bound(alpha: float, n: int, m: int, d: int, sigma: float = 1.0) -> float:
+    """Observation 1: Ω(α/√n + √(d/(nm))) for mean estimation."""
+    return sigma * (alpha / math.sqrt(n) + math.sqrt(d / (n * m)))
+
+
+def optimal_rate(alpha: float, n: int, m: int) -> float:
+    """The target order-optimal rate α/√n + 1/√(nm) (constants dropped)."""
+    return alpha / math.sqrt(n) + 1.0 / math.sqrt(n * m)
+
+
+def median_rate(alpha: float, n: int, m: int) -> float:
+    """Median-GD rate α/√n + 1/√(nm) + 1/n (constants dropped)."""
+    return optimal_rate(alpha, n, m) + 1.0 / n
+
+
+def loglog_slope(xs, ys) -> float:
+    """OLS slope of log(y) on log(x) — used to check empirical scalings."""
+    lx = [math.log(x) for x in xs]
+    ly = [math.log(max(y, 1e-30)) for y in ys]
+    n = len(lx)
+    mx = sum(lx) / n
+    my = sum(ly) / n
+    num = sum((a - mx) * (b - my) for a, b in zip(lx, ly))
+    den = sum((a - mx) ** 2 for a in lx)
+    return num / den
+
+
+def gd_iterations_strongly_convex(L_F: float, lam_F: float, delta: float,
+                                  w0_dist: float) -> int:
+    """T ≥ ((L_F+λ_F)/λ_F)·log(λ_F·‖w0−w*‖ / (2Δ)) (after Theorem 1)."""
+    if delta <= 0:
+        return 1
+    t = (L_F + lam_F) / lam_F * math.log(max(math.e, lam_F * w0_dist / (2 * delta)))
+    return max(1, int(math.ceil(t)))

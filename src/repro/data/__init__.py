@@ -1,0 +1,2 @@
+from repro.data import pipeline, synthetic  # noqa: F401
+from repro.data.pipeline import DataConfig  # noqa: F401

@@ -1,0 +1,105 @@
+"""Sharded data pipeline with Byzantine corruption.
+
+Worker model (matches the paper): the global batch is split evenly over
+the m worker groups; each worker's shard is drawn with a per-worker PRNG
+key derived from (seed, step, worker). Byzantine workers' shards can be
+corrupted at source (label attacks — the paper's experiments) before the
+arrays ever reach the device mesh, exactly like a malicious data owner in
+federated learning.
+
+``make_global_batch`` returns host arrays laid out (global_batch, ...)
+with worker w owning rows [w·B/m : (w+1)·B/m] — matching the
+P(('pod','data')) batch sharding used by the train step, so worker w of
+the mesh really computes its gradient on worker w's (possibly corrupted)
+data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attacks import AttackConfig, label_flip, random_label
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    kind: str = "lm"  # lm|mnist|linreg
+    vocab: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 32
+    num_workers: int = 4  # m
+    seed: int = 0
+    d: int = 784  # classification/regression feature dim
+    sigma: float = 0.5  # linreg noise
+
+
+def _corrupt_labels(cfg: DataConfig, attack: Optional[AttackConfig],
+                    labels: jax.Array, worker: int, key) -> jax.Array:
+    if attack is None or attack.alpha <= 0:
+        return labels
+    if worker >= attack.num_byzantine(cfg.num_workers):
+        return labels
+    if attack.name == "label_flip":
+        return label_flip(labels, attack.num_classes)
+    if attack.name == "random_label":
+        return random_label(labels, key, attack.num_classes)
+    return labels  # gradient attacks happen at the aggregation point
+
+
+def make_lm_batch(cfg: DataConfig, step: int, attack: Optional[AttackConfig] = None
+                  ) -> Dict[str, jax.Array]:
+    """One global LM batch (B, S) with per-worker provenance + corruption."""
+    from repro.data.synthetic import lm_batch
+
+    per = cfg.global_batch // cfg.num_workers
+    parts = []
+    for w in range(cfg.num_workers):
+        key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), w)
+        b = lm_batch(key, per, cfg.seq_len, cfg.vocab)
+        b["labels"] = _corrupt_labels(
+            dataclasses.replace(cfg), attack, b["labels"], w,
+            jax.random.fold_in(key, 999),
+        ) if attack and attack.name in ("label_flip", "random_label") else b["labels"]
+        parts.append(b)
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+def make_classification_shards(cfg: DataConfig, attack: Optional[AttackConfig] = None
+                               ) -> Dict[str, jax.Array]:
+    """Fixed worker-sharded classification dataset, leaves (m, n, ...).
+
+    This is the paper's statistical setting: data drawn once, fixed across
+    iterations; Byzantine workers hold corrupted labels permanently.
+    """
+    from repro.data.synthetic import mnist_analog
+
+    n_per = cfg.global_batch // cfg.num_workers
+    xs, ys = [], []
+    for w in range(cfg.num_workers):
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), w)
+        d = mnist_analog(key, n_per, d=cfg.d)
+        y = _corrupt_labels(cfg, attack, d["y"], w, jax.random.fold_in(key, 999))
+        xs.append(d["x"])
+        ys.append(y)
+    return {"x": jnp.stack(xs), "y": jnp.stack(ys)}
+
+
+def lm_iterator(cfg: DataConfig, attack: Optional[AttackConfig] = None,
+                start_step: int = 0) -> Iterator[Dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        yield make_lm_batch(cfg, step, attack)
+        step += 1
+
+
+def host_to_mesh(batch: Dict[str, jax.Array], mesh, batch_axes) -> Dict[str, jax.Array]:
+    """Shard a host batch onto the mesh over the worker axes (dim 0)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+    sh = NamedSharding(mesh, spec)
+    return jax.tree.map(lambda x: jax.device_put(x, sh), batch)

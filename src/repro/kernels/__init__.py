@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's aggregation hot-spot.
+
+- robust_agg.py: pl.pallas_call kernels (odd-even sorting network over the
+  worker axis, (m, BLOCK) VMEM tiles)
+- ops.py: jit'd dispatch wrappers (pallas on TPU, interpret/XLA on CPU)
+- ref.py: pure-jnp oracle used by the allclose tests
+"""
+from repro.kernels import ops, ref, robust_agg  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers around the robust-aggregation Pallas kernel.
+
+``robust_aggregate(x, method, beta)`` accepts any (m, ...) array, flattens
+the coordinate space, dispatches to the Pallas kernel (interpret mode on
+CPU, Mosaic on TPU), and restores the shape. The XLA-sort fallback
+(``backend='xla'``) is what the distributed reductions use on the CPU
+dry-run backend, where Mosaic cannot lower.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref, robust_agg
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def robust_aggregate(
+    x: jax.Array,
+    method: str = "median",
+    beta: float = 0.1,
+    backend: str = "auto",  # auto|pallas|xla
+    block: int = 1024,
+) -> jax.Array:
+    """Aggregate (m, ...) -> (...) coordinate-wise with the given method."""
+    m = x.shape[0]
+    flat = x.reshape(m, -1)
+    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    interpret = not _on_tpu()
+    if method == "median":
+        out = (
+            robust_agg.median_pallas(flat, block=block, interpret=interpret)
+            if use_pallas
+            else ref.median_ref(flat)
+        )
+    elif method == "trimmed_mean":
+        trim = int(beta * m)
+        out = (
+            robust_agg.trimmed_mean_pallas(flat, trim, block=block, interpret=interpret)
+            if use_pallas
+            else ref.trimmed_mean_ref(flat, beta)
+        )
+    elif method == "mean":
+        out = jnp.mean(flat.astype(jnp.float32), axis=0).astype(flat.dtype)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return out.reshape(x.shape[1:])
+
+
+median = functools.partial(robust_aggregate, method="median")
+trimmed_mean = robust_aggregate  # explicit method kwarg recommended

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the robust-aggregation kernel.
+
+Semantics target: sort the m per-worker rows per coordinate, then
+- median: middle row (odd m) or mean of the two middle rows (even m);
+- trimmed mean: mean of rows b..m-b-1 where b = floor(beta*m).
+Accumulation in float32, result cast back to the input dtype — matching
+the kernel exactly so tests can assert allclose with tight tolerances.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def median_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (m, n) -> (n,) coordinate-wise median."""
+    m = x.shape[0]
+    s = jnp.sort(x, axis=0)
+    if m % 2 == 1:
+        return s[m // 2]
+    lo = s[m // 2 - 1].astype(jnp.float32)
+    hi = s[m // 2].astype(jnp.float32)
+    return ((lo + hi) * 0.5).astype(x.dtype)
+
+
+def trimmed_mean_ref(x: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """x: (m, n) -> (n,) coordinate-wise beta-trimmed mean."""
+    m = x.shape[0]
+    b = int(beta * m)
+    assert 2 * b < m, f"trim count 2*{b} >= m={m}"
+    s = jnp.sort(x.astype(jnp.float32), axis=0)
+    return jnp.mean(s[b : m - b], axis=0).astype(x.dtype)

@@ -1,0 +1,6 @@
+"""Launch layer: meshes, step builders, dry-run, roofline.
+
+NOTE: import ``repro.launch.dryrun`` only as a __main__ entry point — it
+sets XLA_FLAGS for 512 placeholder devices at import time.
+"""
+from repro.launch import hlo_analysis, mesh, roofline, steps  # noqa: F401

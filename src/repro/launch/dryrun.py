@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) builds the production mesh from 512
+# placeholder host devices; smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+For each combo this proves the distribution config is coherent without
+real hardware: sharding mismatches, OOM-at-compile, and unsupported
+collectives all fail here. Emits one JSON record per combo with
+memory analysis, cost analysis, and per-collective byte totals parsed
+from the optimized HLO (consumed by launch/roofline.py and
+EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out dryrun_results.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, ParallelConfig, get_config
+from repro.core.attacks import AttackConfig
+from repro.launch import hlo_analysis, roofline, steps
+from repro.launch.mesh import make_production_mesh, num_workers
+from repro.models import transformer as T
+from repro.optim.optimizers import get_optimizer
+
+# long_500k applicability (DESIGN.md §Input-shape handling):
+#   native sub-quadratic: mamba2 (state), recurrentgemma (RG-LRU + local
+#   attn), h2o-danube (native SWA); dense/moe/vlm run the documented
+#   sliding-window variant; whisper-small is skipped (enc-dec audio model,
+#   bounded decoder context).
+SKIP = {("whisper-small", "long_500k"): "enc-dec audio model; 500k-token decode has no meaning"}
+
+
+def run_combo(arch: str, shape_name: str, mesh_kind: str, pcfg: ParallelConfig,
+              optimizer: str = "adamw") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    cfg = steps.long_context_cfg(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "strategy": pcfg.agg_strategy, "agg": pcfg.agg_method,
+        "param_mode": pcfg.param_mode, "attn_chunk": pcfg.attn_chunk,
+        "seq_parallel": pcfg.seq_parallel, "remat": pcfg.remat,
+        "workers": num_workers(mesh),
+        "params": T.count_params(cfg), "active_params": T.count_active_params(cfg),
+        "variant": cfg.name,
+    }
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        fsdp = pcfg.param_mode == "fsdp" and shape.kind == "train"
+        params = (steps.abstract_params_fsdp(cfg, mesh) if fsdp
+                  else steps.abstract_params(cfg, mesh))
+        inputs = steps.input_specs(cfg, shape, mesh)
+        if shape.kind == "train":
+            opt = get_optimizer(optimizer, 1e-4)
+            opt_state = (steps.abstract_opt_state_fsdp(opt, cfg, mesh) if fsdp
+                         else steps.abstract_opt_state(opt, cfg, mesh))
+            step_fn = steps.make_train_step(cfg, pcfg, mesh, opt,
+                                            attack=AttackConfig("none", 0.0))
+            batch = {k: v for k, v in inputs.items()}
+            lowered = step_fn.lower(params, opt_state, batch, jnp.int32(0))
+            tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            step_fn = steps.make_prefill_step(cfg, mesh, kv_block=pcfg.attn_chunk)
+            args = [params, inputs["tokens"]]
+            if cfg.frontend != "none":
+                args.append(inputs["frontend"])
+            lowered = step_fn.lower(*args)
+            tokens = shape.global_batch * shape.seq_len
+        else:
+            step_fn = steps.make_decode_step(cfg, mesh)
+            lowered = step_fn.lower(params, inputs["token"], inputs["cache"], inputs["pos"])
+            tokens = shape.global_batch  # one token per sequence
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "peak_memory_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            rec[field] = int(v)
+    ca = compiled.cost_analysis() or {}
+    # XLA raw numbers for reference (these count while-loop bodies ONCE —
+    # see launch/hlo_analysis.py; the roofline uses the trip-count-aware
+    # analysis below)
+    rec["xla_flops_body_once"] = float(ca.get("flops", 0.0))
+    rec["xla_bytes_body_once"] = float(ca.get("bytes accessed", 0.0))
+    hlo = hlo_analysis.analyze(compiled.as_text())
+    rec["flops"] = hlo["flops"]
+    rec["bytes_accessed"] = hlo["bytes"]
+    rec["collectives"] = {k.replace("coll_", ""): v for k, v in hlo.items()
+                          if k.startswith("coll_")}
+    rec["collectives"]["total"] = hlo["collective_bytes"]
+    terms = roofline.roofline_terms(rec["flops"], rec["bytes_accessed"],
+                                    hlo["collective_bytes"])
+    rec.update(terms)
+    mf = roofline.model_flops(rec["active_params"], tokens, shape.kind)
+    rec["model_flops_global"] = mf
+    chips = 512 if mesh_kind == "multi" else 256
+    rec["model_flops_per_chip"] = mf / chips
+    rec["useful_flops_ratio"] = (rec["model_flops_per_chip"] / rec["flops"]) if rec["flops"] else 0.0
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true", help="run every combo on both meshes")
+    ap.add_argument("--strategy", default="gather",
+                    choices=["gather", "bucketed", "hierarchical"])
+    ap.add_argument("--param-mode", default="replicated", choices=["replicated", "fsdp"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--agg", default="median", choices=["mean", "median", "trimmed_mean"])
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--remat", type=int, default=1)
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    pcfg = ParallelConfig(agg_method=args.agg, agg_strategy=args.strategy,
+                          param_mode=args.param_mode, seq_parallel=args.seq_parallel,
+                          remat=bool(args.remat), attn_chunk=args.attn_chunk)
+
+    combos = []
+    if args.all:
+        for arch in ARCHITECTURES:
+            for shape in INPUT_SHAPES:
+                for mesh in ("single", "multi"):
+                    combos.append((arch, shape, mesh))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all) required"
+        combos = [(args.arch, args.shape, args.mesh)]
+
+    # resume support: skip combos already recorded (ok/skipped) in --out
+    def key(arch, shape, mesh):
+        return (arch, shape, mesh, args.strategy, args.param_mode, args.attn_chunk,
+                args.seq_parallel)
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("strategy", "gather"),
+                              r.get("param_mode", "replicated"),
+                              r.get("attn_chunk", 1024),
+                              r.get("seq_parallel", False)))
+    combos = [c for c in combos if key(*c) not in done]
+    print(f"# {len(combos)} combos to run ({len(done)} already done)", flush=True)
+
+    ok = True
+    for arch, shape, mesh in combos:
+        if (arch, shape) in SKIP:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "skipped",
+                   "reason": SKIP[(arch, shape)]}
+        else:
+            try:
+                rec = run_combo(arch, shape, mesh, pcfg, args.optimizer)
+                rec["status"] = "ok"
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                ok = False
+                rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+        line = json.dumps(rec)
+        print(line, flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(line + "\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+"""Turn dryrun_results.jsonl into the EXPERIMENTS.md §Dry-run / §Roofline
+tables (markdown)."""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+from repro.launch.roofline import ICI_BW, ICI_LINKS, format_seconds
+
+
+def recompute_collective(r):
+    """Uniform wire-bytes weighting (all-reduce 2×) across old/new records."""
+    coll = r.get("collectives", {})
+    total = sum(v * (2.0 if k == "all-reduce" else 1.0)
+                for k, v in coll.items() if k != "total")
+    r["collective_s"] = total / (ICI_LINKS * ICI_BW)
+    r["dominant"] = max(
+        ("compute", r["compute_s"]), ("memory", r["memory_s"]),
+        ("collective", r["collective_s"]), key=lambda kv: kv[1])[0]
+    return r
+
+
+def load(path: str):
+    rows = []
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                   r.get("strategy", ""), r.get("param_mode", ""),
+                   r.get("attn_chunk", ""), r.get("seq_parallel", False))
+            if r.get("status") == "ok":
+                r = recompute_collective(r)
+            seen[key] = r  # last record wins
+    return list(seen.values())
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if b >= div:
+            return f"{b/div:.1f}{unit}"
+    return f"{b:.0f}B"
+
+
+def dryrun_table(rows, mesh: str) -> str:
+    out = ["| arch | shape | status | compile | peak mem/dev | HLO flops/dev | HBM bytes/dev | collective bytes/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("strategy", "gather") != "gather":
+            continue
+        if r.get("param_mode", "replicated") != "replicated":
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) | - | - | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']}s "
+            f"| {fmt_bytes(r.get('peak_memory_in_bytes'))} "
+            f"| {r['flops']:.2e} | {fmt_bytes(r['bytes_accessed'])} "
+            f"| {fmt_bytes(r['collectives']['total'])} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh: str = "single") -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS/chip | useful ratio |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        if r.get("strategy", "gather") != "gather" or r.get("param_mode", "replicated") != "replicated":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {format_seconds(r['compute_s'])} | {format_seconds(r['memory_s'])} "
+            f"| {format_seconds(r['collective_s'])} | **{r['dominant']}** "
+            f"| {r['model_flops_per_chip']:.2e} | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def perf_table(paths, pairs) -> str:
+    """§Perf comparison: all recorded variants for the hillclimbed pairs."""
+    rows = []
+    for p in paths:
+        try:
+            rows.extend(load(p))
+        except FileNotFoundError:
+            pass
+    out = ["| arch | variant | compute | memory | collective | peak/dev | args/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for arch, shape in pairs:
+        sel = [r for r in rows if r.get("arch") == arch and r.get("shape") == shape
+               and r.get("mesh") == "single" and r.get("status") == "ok"]
+        sel.sort(key=lambda r: (r.get("param_mode", ""), r.get("strategy", ""),
+                                r.get("attn_chunk", 0), r.get("seq_parallel", False)))
+        for r in sel:
+            variant = f"{r.get('strategy','gather')}/{r.get('param_mode','replicated')}"
+            if r.get("attn_chunk", 1024) != 1024:
+                variant += f"/chunk{r['attn_chunk']}"
+            if r.get("seq_parallel"):
+                variant += "/seqpar"
+            out.append(
+                f"| {arch} | {variant} | {format_seconds(r['compute_s'])} "
+                f"| {format_seconds(r['memory_s'])} | {format_seconds(r['collective_s'])} "
+                f"| {fmt_bytes(r.get('peak_memory_in_bytes'))} "
+                f"| {fmt_bytes(r.get('argument_size_in_bytes'))} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results.jsonl")
+    ap.add_argument("--section", default="all", choices=["dryrun", "roofline", "perf", "all"])
+    args = ap.parse_args()
+    rows = load(args.inp)
+    if args.section in ("perf", "all"):
+        pairs = [("llama3.2-3b", "train_4k"), ("grok-1-314b", "train_4k"),
+                 ("llama3-405b", "train_4k")]
+        print("\n### Perf variants (hillclimbed pairs)\n")
+        print(perf_table([args.inp, "perf_results.jsonl", "perf_round2.jsonl",
+                          "perf_round3.jsonl"], pairs))
+    if args.section in ("dryrun", "all"):
+        print("### Single-pod mesh (16×16 = 256 chips)\n")
+        print(dryrun_table(rows, "single"))
+        print("\n### Multi-pod mesh (2×16×16 = 512 chips)\n")
+        print(dryrun_table(rows, "multi"))
+    if args.section in ("roofline", "all"):
+        print("\n### Roofline (single-pod, per-device terms)\n")
+        print(roofline_table(rows, "single"))
+
+
+if __name__ == "__main__":
+    main()

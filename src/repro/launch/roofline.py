@@ -1,0 +1,119 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), TPU v5e-class constants:
+
+  compute    = HLO_FLOPs            / (chips · 197e12 FLOP/s bf16)
+  memory     = HLO_bytes            / (chips · 819e9  B/s HBM)
+  collective = collective_bytes     / (chips · n_links · 50e9 B/s ICI)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` — note XLA
+reports these for the *per-device* SPMD program, so we do NOT divide by
+chips again; the division shown above applies when cost_analysis returns
+global numbers (it returns per-device for SPMD lowerings — verified in
+tests), so the per-device interpretation is used directly.
+
+collective_bytes is parsed from the optimized HLO text: we sum the
+*output* tensor bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (async ``-start`` forms counted once,
+``-done`` forms skipped). That is the standard received-bytes
+approximation for ring algorithms (each device receives ≈ the gathered
+output once).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+ICI_LINKS = 4  # 2D torus: ~4 usable links per chip (2 axes × 2 directions)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shape like bf16[8,128,256]{2,1,0}; tuples like (f32[...], f32[...])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # "%name = TYPE all-gather-start(...)" or "... = TYPE all-gather(...)"
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(result_type)
+        out[kind] += b
+        out["total"] += b
+    return out
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    chips: int = 1,  # cost_analysis is per-device; keep 1 unless global
+) -> Dict[str, float]:
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = hbm_bytes / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_LINKS * ICI_BW)
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": max(compute, memory, collective),
+    }
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def format_seconds(s: float) -> str:
+    if s <= 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s*1e6:.1f}us"
+    if s < 1:
+        return f"{s*1e3:.2f}ms"
+    return f"{s:.3f}s"

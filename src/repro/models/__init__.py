@@ -1,0 +1,13 @@
+"""Model substrate: the unified stack for all assigned architectures."""
+from repro.models import attention, layers, moe, paper_models, rglru, sharding, ssm, transformer  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    count_active_params,
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)

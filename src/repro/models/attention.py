@@ -1,0 +1,139 @@
+"""GQA attention: plain, chunked (online-softmax), and decode-with-cache.
+
+Shapes use the grouped layout throughout: q (B, S, KV, G, hd) where
+H = KV·G query heads share KV heads; k/v (B, S, KV, hd). This avoids ever
+materialising KV repeated to H heads.
+
+``chunked_attention`` scans over KV blocks with an online softmax so no
+(S, S) buffer exists; the scan body is remat'd (jax.checkpoint) so the
+backward pass recomputes per-block probabilities instead of storing them —
+the pure-JAX analogue of a flash kernel, chosen because this repo's
+perf-critical Pallas budget goes to the paper's own hot-spot (robust
+aggregation) and XLA:TPU already pipelines this scan well.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos: jax.Array, kpos: jax.Array, causal: bool, window: int) -> jax.Array:
+    """(Sq, Sk) boolean mask: True = attend."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window and window > 0:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    return ok
+
+
+def plain_attention(
+    q: jax.Array,  # (B, Sq, KV, G, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference full-materialisation attention (small S / tests)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(q.shape[1])
+    kpos = jnp.arange(k.shape[1])
+    m = _mask(qpos, kpos, causal, window)
+    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, KV, G, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV blocks; O(Sq·kv_block) live memory."""
+    b, sq, kv, g, hd = q.shape
+    sk = k.shape[1]
+    if sk % kv_block != 0:
+        pad = kv_block - sk % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk_p = sk + pad
+    else:
+        sk_p = sk
+    nblk = sk_p // kv_block
+    kb = k.reshape(b, nblk, kv_block, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, kv_block, kv, hd).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    qpos = q_offset + jnp.arange(sq)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        acc, mx, lse = carry
+        kc, vc, blk = xs
+        kpos = blk * kv_block + jnp.arange(kv_block)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, kc.astype(jnp.float32)) * scale
+        msk = _mask(qpos, kpos, causal, window) & (kpos < sk)[None, :]
+        logits = jnp.where(msk[None, None, None], logits, NEG_INF)
+        blk_max = jnp.max(logits, axis=-1)
+        new_mx = jnp.maximum(mx, blk_max)
+        corr = jnp.exp(mx - new_mx)
+        p = jnp.exp(logits - new_mx[..., None])
+        acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        lse = lse * corr + jnp.sum(p, axis=-1)
+        return (acc, new_mx, lse), None
+
+    acc0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    mx0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    lse0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    (acc, _, lse), _ = jax.lax.scan(body, (acc0, mx0, lse0), (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(lse[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B, Sq, KV, G, hd)
+
+
+def attention(
+    q, k, v, causal: bool = True, window: int = 0, q_offset: int = 0, kv_block: int = 1024
+):
+    """Dispatch: plain for short sequences, chunked otherwise."""
+    if kv_block == 0 or k.shape[1] <= kv_block:
+        return plain_attention(q, k, v, causal, window, q_offset)
+    return chunked_attention(q, k, v, causal, window, q_offset, kv_block)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, KV, G, hd)
+    k_cache: jax.Array,  # (B, S_cache, KV, hd) — includes the new token
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar: absolute position of the new token
+    window: int = 0,
+    pos_offset: int = 0,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) cache.
+
+    ``pos_offset`` maps cache slot s to absolute position (ring buffers:
+    slot s holds absolute position pos_offset + s ... used as 0 for linear
+    caches where slot == absolute position).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    kpos = pos_offset + jnp.arange(k_cache.shape[1])
+    ok = kpos <= pos
+    if window and window > 0:
+        ok &= kpos > pos - window
+    logits = jnp.where(ok[None, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

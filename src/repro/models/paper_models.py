@@ -1,0 +1,102 @@
+"""The paper's own experiment models (Section 7).
+
+- multi-class logistic regression (paper Tables 2 and 4);
+- a small convolutional network (paper Table 3);
+- linear regression (Proposition 1's running example).
+
+These run on the synthetic MNIST-analog dataset from repro.data (the
+container is offline — see DESIGN.md §Assumptions).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- logistic
+
+
+def init_logreg(key, d: int = 784, num_classes: int = 10):
+    return {
+        "w": jnp.zeros((d, num_classes), jnp.float32),
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def logreg_loss(params, batch, l2: float = 1e-4) -> jax.Array:
+    x, y = batch["x"], batch["y"]
+    logits = x @ params["w"] + params["b"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    reg = 0.5 * l2 * jnp.sum(params["w"] ** 2)
+    return jnp.mean(logz - gold) + reg
+
+
+def logreg_accuracy(params, batch) -> jax.Array:
+    logits = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean(jnp.argmax(logits, axis=-1) == batch["y"])
+
+
+# ------------------------------------------------------------------ cnn
+
+
+def init_cnn(key, num_classes: int = 10, width: int = 16):
+    """Small convnet for 28x28x1 inputs: conv3x3 -> conv3x3 -> pool -> fc."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    he = lambda k, shape, fan: (jnp.sqrt(2.0 / fan) * jax.random.normal(k, shape)).astype(jnp.float32)
+    return {
+        "c1": he(k1, (3, 3, 1, width), 9),
+        "b1": jnp.zeros((width,)),
+        "c2": he(k2, (3, 3, width, width), 9 * width),
+        "b2": jnp.zeros((width,)),
+        "fc1": he(k3, (7 * 7 * width, 64), 7 * 7 * width),
+        "bf1": jnp.zeros((64,)),
+        "fc2": he(k4, (64, num_classes), 64),
+        "bf2": jnp.zeros((num_classes,)),
+    }
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return jax.nn.relu(y + b)
+
+
+def cnn_logits(params, x):
+    """x: (B, 784) flattened -> logits."""
+    b = x.shape[0]
+    img = x.reshape(b, 28, 28, 1)
+    h = _conv(img, params["c1"], params["b1"])
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = _conv(h, params["c2"], params["b2"])
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(b, -1)
+    h = jax.nn.relu(h @ params["fc1"] + params["bf1"])
+    return h @ params["fc2"] + params["bf2"]
+
+
+def cnn_loss(params, batch) -> jax.Array:
+    logits = cnn_logits(params, batch["x"])
+    y = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params, batch) -> jax.Array:
+    return jnp.mean(jnp.argmax(cnn_logits(params, batch["x"]), axis=-1) == batch["y"])
+
+
+# --------------------------------------------------------------- linreg
+
+
+def init_linreg(key, d: int):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def linreg_loss(w, batch) -> jax.Array:
+    x, y = batch["x"], batch["y"]
+    return 0.5 * jnp.mean((x @ w - y) ** 2)

@@ -1,0 +1,66 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+  r_t = σ(W_a x_t + b_a)            recurrence gate
+  i_t = σ(W_x x_t + b_x)            input gate
+  a_t = exp(-c · softplus(Λ) · r_t) with c = 8
+  h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses a log-depth ``lax.associative_scan`` over time (the linear
+recurrence (A, U) composes associatively) — the TPU-native adaptation of
+the paper's sequential scan. Decode is the O(1) state update.
+
+The full recurrent block is: x-branch linear → causal conv1d(4) → RG-LRU,
+gated by a GeLU branch, projected back to d_model (see transformer.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+RG_LRU_C = 8.0
+
+
+def _gates(x, w_a, b_a, w_x, b_x, lam):
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @ w_a.astype(jnp.float32) + b_a)
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @ w_x.astype(jnp.float32) + b_x)
+    log_a = -RG_LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r  # (B,S,C) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_scan(
+    x: jax.Array,  # (B, S, C)
+    w_a: jax.Array,  # (C, C)
+    b_a: jax.Array,  # (C,)
+    w_x: jax.Array,  # (C, C)
+    b_x: jax.Array,  # (C,)
+    lam: jax.Array,  # (C,)
+    h0: jax.Array | None = None,  # (B, C)
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU via associative scan. Returns (y, h_final)."""
+    a, u = _gates(x, w_a, b_a, w_x, b_x, lam)  # (B,S,C) each, f32
+    if h0 is not None:
+        # fold the initial state into the first input: h_0' = a_0 h0 + u_0
+        u = u.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    A, H = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return H.astype(x.dtype), H[:, -1]
+
+
+def rglru_decode_step(
+    state: jax.Array,  # (B, C)
+    x: jax.Array,  # (B, 1, C)
+    w_a, b_a, w_x, b_x, lam,
+) -> Tuple[jax.Array, jax.Array]:
+    a, u = _gates(x, w_a, b_a, w_x, b_x, lam)
+    h = a[:, 0] * state.astype(jnp.float32) + u[:, 0]
+    return h[:, None].astype(x.dtype), h

@@ -1,0 +1,113 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training path: the chunked SSD algorithm — within-chunk attention-like
+quadratic term + inter-chunk linear state recurrence (lax.scan over
+chunks). Decode path: the O(1) recurrent state update.
+
+Shapes (ngroups = 1):
+  u  (B, S, D)           block input
+  z,x (B, S, d_inner)    gated / ssm branches, d_inner = expand·D
+  per head: P = head_dim, H = d_inner // P heads
+  B,C (B, S, N)          input/output projections of the state, N = d_state
+  dt (B, S, H)           per-head time step
+State: (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, W-1, conv_dim) — rolling conv input window
+    ssd: jax.Array  # (B, H, P, N)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) -> (..., L, L) lower-triangular segment sums:
+    out[i, j] = sum_{k=j+1..i} a[k] for j < i, 0 on diag, -inf above."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) — already multiplied by dt
+    loga: jax.Array,  # (B, S, H) — log decay per step (dt * -exp(A_log))
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int = 256,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    # chunked views, chunk axis leading for scan
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)  # (nc,B,L,H,P)
+    ac = loga.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)  # (nc,B,L,H)
+    bc = Bm.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)  # (nc,B,L,N)
+    cc = Cm.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    @jax.checkpoint
+    def body(state, xs):
+        xk, ak, bk, ck = xs  # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        akf = ak.astype(jnp.float32)
+        # 1) within-chunk (quadratic) term
+        L = jnp.exp(_segsum(akf.transpose(0, 2, 1)))  # (B,H,L,L)
+        scores = jnp.einsum("bln,bsn->bls", ck.astype(jnp.float32), bk.astype(jnp.float32))
+        y_diag = jnp.einsum("bhls,bls,bshp->blhp", L, scores, xk.astype(jnp.float32))
+        # 2) contribution of the carried-in state
+        decay_in = jnp.exp(jnp.cumsum(akf, axis=1))  # (B,L,H) decay from chunk start to l (inclusive)
+        y_state = jnp.einsum("bln,bhpn,blh->blhp", ck.astype(jnp.float32), state, decay_in)
+        # 3) new chunk-final state
+        total = jnp.sum(akf, axis=1)  # (B,H)
+        decay_out = jnp.exp(total[:, None, :] - jnp.cumsum(akf, axis=1))  # (B,L,H): decay from l (exclusive) to end
+        new_state = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bln,blhp,blh->bhpn", bk.astype(jnp.float32), xk.astype(jnp.float32), decay_out
+        )
+        return new_state, y_diag + y_state
+
+    hT, yc = jax.lax.scan(body, h0, (xc, ac, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B, H, P, N)
+    x: jax.Array,  # (B, H, P) — dt-scaled input
+    loga: jax.Array,  # (B, H)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+) -> Tuple[jax.Array, jax.Array]:
+    a = jnp.exp(loga.astype(jnp.float32))[:, :, None, None]  # (B,H,1,1)
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32), Bm.astype(jnp.float32))
+    new_state = a * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, prev: jax.Array | None = None):
+    """Depthwise causal conv. x (B,S,C), w (W,C). If ``prev`` (B,W-1,C) is
+    given (decode/chunk continuation), it prefixes x; returns (y, new_prev)."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    new_prev = xp[:, -(width - 1) :]
+    return jax.nn.silu(y), new_prev

@@ -1,0 +1,2 @@
+from repro.optim import schedules  # noqa: F401
+from repro.optim.optimizers import Optimizer, adamw, get_optimizer, momentum, sgd  # noqa: F401

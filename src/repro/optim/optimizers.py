@@ -1,0 +1,92 @@
+"""Pure-JAX pytree optimizers: SGD, momentum, AdamW.
+
+No optax in this container — these are the standard update rules operating
+on arbitrary parameter pytrees. States are kept in f32 regardless of the
+parameter dtype (mixed-precision master statistics); AdamW keeps m/v, SGD
+keeps nothing, momentum keeps one slot.
+
+All optimizers work on *aggregated* gradients: the robust reduction has
+already happened upstream (core/distributed.py), so every worker applies
+an identical update (replicated mode) or updates its own shard (FSDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        new = jax.tree.map(lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        new_state = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, new_state)
+        return new, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        step = step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+            return p32.astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, weight_decay: float = 0.0, beta: float = 0.9) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, beta)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (scalar jnp functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def inverse_sqrt(lr: float, warmup: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(step / max(warmup, 1), jnp.sqrt(max(warmup, 1) / jnp.maximum(step, 1)))
+
+    return fn

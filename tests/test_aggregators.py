@@ -1,0 +1,204 @@
+"""Unit + property tests for the coordinate-wise aggregators (Defs 1-2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregators as agg
+
+
+# fixed shapes so jit caches are reused across hypothesis examples (a new
+# shape per example would recompile and blow the test budget); subnormals
+# excluded — CPU FTZ makes them tie with 0.0 in sorts, so the *selected
+# representative* of the tie is permutation-dependent (values still equal).
+_SHAPES = [(3, 7), (4, 7), (16, 7), (17, 7), (32, 7)]
+
+
+def _floats():
+    return st.floats(-1e6, 1e6, allow_nan=False, allow_subnormal=False, width=32)
+
+
+def _arrays(min_m=1, max_m=33):
+    shapes = [s for s in _SHAPES if min_m <= s[0] <= max_m]
+    return st.sampled_from(shapes).flatmap(
+        lambda mn: st.lists(
+            st.lists(_floats(), min_size=mn[1], max_size=mn[1]),
+            min_size=mn[0], max_size=mn[0],
+        )
+    )
+
+
+class TestMedian:
+    def test_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        for m in (1, 2, 3, 16, 17, 32):
+            x = rng.standard_normal((m, 100)).astype(np.float32)
+            got = agg.coordinate_median(jnp.asarray(x))
+            np.testing.assert_allclose(np.asarray(got), np.median(x, axis=0), rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(_arrays())
+    def test_property_matches_numpy(self, rows):
+        x = np.asarray(rows, np.float32)
+        got = np.asarray(agg.coordinate_median(jnp.asarray(x)))
+        np.testing.assert_allclose(got, np.median(x, axis=0), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(_arrays(min_m=3), st.randoms())
+    def test_permutation_invariant(self, rows, rnd):
+        x = np.asarray(rows, np.float32)
+        perm = list(range(x.shape[0]))
+        rnd.shuffle(perm)
+        a = np.asarray(agg.coordinate_median(jnp.asarray(x)))
+        b = np.asarray(agg.coordinate_median(jnp.asarray(x[perm])))
+        np.testing.assert_allclose(a, b, rtol=0, atol=1e-30)  # equal up to FTZ ties
+
+    def test_breakdown_bounded_by_honest_range(self):
+        """With q < m/2 Byzantine rows of ANY value, the median stays within
+        the honest min/max per coordinate — the robustness property that
+        makes Theorem 1 possible."""
+        rng = np.random.default_rng(1)
+        m, q, n = 15, 7, 50
+        honest = rng.standard_normal((m - q, n)).astype(np.float32)
+        adv = np.full((q, n), 1e30, np.float32)
+        x = np.concatenate([honest, adv])
+        med = np.asarray(agg.coordinate_median(jnp.asarray(x)))
+        assert (med <= honest.max(0)).all() and (med >= honest.min(0)).all()
+
+    def test_mean_is_broken_by_one_byzantine(self):
+        x = np.zeros((10, 5), np.float32)
+        x[0] = 1e30
+        assert (np.asarray(agg.coordinate_mean(jnp.asarray(x))) > 1e28).all()
+
+
+class TestTrimmedMean:
+    def test_no_trim_is_mean(self):
+        x = jnp.asarray(np.random.default_rng(2).standard_normal((8, 20)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(agg.coordinate_trimmed_mean(x, 0.0)),
+            np.asarray(agg.coordinate_mean(x)), rtol=1e-6)
+
+    def test_matches_scipy_style(self):
+        rng = np.random.default_rng(3)
+        m, n, beta = 20, 30, 0.2
+        x = rng.standard_normal((m, n)).astype(np.float32)
+        b = int(beta * m)
+        want = np.sort(x, axis=0)[b : m - b].mean(0)
+        got = np.asarray(agg.coordinate_trimmed_mean(jnp.asarray(x), beta))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_breakdown_bounded_when_beta_geq_alpha(self):
+        rng = np.random.default_rng(4)
+        m, n = 20, 40
+        q = 3  # alpha = 0.15
+        beta = 0.2  # >= alpha: Theorem 4's condition
+        honest = rng.standard_normal((m - q, n)).astype(np.float32)
+        adv = np.full((q, n), -1e30, np.float32)
+        x = np.concatenate([adv, honest])
+        got = np.asarray(agg.coordinate_trimmed_mean(jnp.asarray(x), beta))
+        assert (got >= honest.min(0)).all() and (got <= honest.max(0)).all()
+
+    def test_beta_below_alpha_can_break(self):
+        """Converse: with beta < alpha the trimmed mean IS corruptible —
+        the paper's requirement beta >= alpha is necessary."""
+        m, n, q = 20, 5, 4  # alpha=0.2
+        honest = np.zeros((m - q, n), np.float32)
+        adv = np.full((q, n), 1e12, np.float32)
+        x = np.concatenate([adv, honest])
+        got = np.asarray(agg.coordinate_trimmed_mean(jnp.asarray(x), 0.1))
+        assert (got > 1e9).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(_arrays(min_m=5), st.sampled_from([0.1, 0.2, 0.3]))
+    def test_property_between_min_max(self, rows, beta):
+        x = np.asarray(rows, np.float32)
+        if 2 * int(beta * x.shape[0]) >= x.shape[0]:
+            return
+        got = np.asarray(agg.coordinate_trimmed_mean(jnp.asarray(x), beta))
+        assert (got >= x.min(0) - 1e-3).all() and (got <= x.max(0) + 1e-3).all()
+
+    def test_invalid_beta(self):
+        x = jnp.zeros((4, 4))
+        with pytest.raises(ValueError):
+            agg.coordinate_trimmed_mean(x, 0.5)
+
+
+def test_tree_aggregate():
+    tree = {"a": jnp.ones((6, 3)), "b": {"c": jnp.arange(12.0).reshape(6, 2)}}
+    out = agg.tree_aggregate(tree, "median")
+    assert out["a"].shape == (3,)
+    assert out["b"]["c"].shape == (2,)
+
+
+class TestGeometricMedian:
+    def test_clean_close_to_mean(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((30, 8)), jnp.float32)
+        gm = agg.geometric_median(x)
+        assert float(jnp.linalg.norm(gm - jnp.mean(x, 0))) < 0.5
+
+    def test_robust_to_outlier_rows(self):
+        rng = np.random.default_rng(6)
+        honest = rng.standard_normal((12, 8)).astype(np.float32)
+        adv = np.full((5, 8), 1e6, np.float32)
+        x = jnp.asarray(np.concatenate([honest, adv]))
+        gm = np.asarray(agg.geometric_median(x, iters=32))
+        assert np.linalg.norm(gm - honest.mean(0)) < 3.0
+
+    def test_rotation_equivariance(self):
+        """Unlike the coordinate-wise median, geometric median commutes
+        with rotations (the reason it can't use the bucketed schedule)."""
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((9, 4)).astype(np.float32)
+        q, _ = np.linalg.qr(rng.standard_normal((4, 4)))
+        a = np.asarray(agg.geometric_median(jnp.asarray(x) @ q, iters=40))
+        b = np.asarray(agg.geometric_median(jnp.asarray(x), iters=40)) @ q
+        np.testing.assert_allclose(a, b, atol=5e-3)
+
+    def test_registered(self):
+        fn = agg.get_aggregator("geometric_median")
+        assert fn(jnp.ones((4, 3))).shape == (3,)
+
+
+class TestKrum:
+    def test_selects_honest_cluster(self):
+        rng = np.random.default_rng(8)
+        honest = rng.standard_normal((12, 6)).astype(np.float32) * 0.1 + 1.0
+        adv = rng.standard_normal((4, 6)).astype(np.float32) * 0.1 - 50.0
+        x = jnp.asarray(np.concatenate([adv, honest]))
+        out = np.asarray(agg.krum(x, num_byzantine=4))
+        assert np.linalg.norm(out - 1.0) < 1.0  # picked an honest vector
+
+    def test_multi_krum_averages(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal((10, 4)), jnp.float32)
+        single = agg.krum(x, 2, multi=1)
+        multi = agg.krum(x, 2, multi=4)
+        assert single.shape == multi.shape == (4,)
+
+    def test_registered(self):
+        fn = agg.get_aggregator("krum", beta=0.2)
+        assert fn(jnp.ones((10, 3))).shape == (3,)
+        fn = agg.get_aggregator("multi_krum", beta=0.2)
+        assert fn(jnp.ones((10, 3))).shape == (3,)
+
+
+def test_alie_attack_hides_in_spread():
+    from repro.core.attacks import AttackConfig, apply_gradient_attack
+
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    atk = AttackConfig("alie", alpha=0.25, shift=1.0)
+    out = np.asarray(apply_gradient_attack(atk, x, atk.byzantine_mask(16)))
+    honest = np.asarray(x[4:])
+    # ALIE rows stay within ~2 std of the honest mean (stealthy by design)
+    dev = np.abs(out[:4] - honest.mean(0)) / (honest.std(0) + 1e-9)
+    assert dev.max() < 2.5
+
+
+def test_quantile():
+    x = jnp.asarray(np.arange(11, dtype=np.float32)[:, None])
+    assert float(agg.coordinate_quantile(x, 0.5)[0]) == 5.0
+    assert float(agg.coordinate_quantile(x, 0.0)[0]) == 0.0
+    assert float(agg.coordinate_quantile(x, 1.0)[0]) == 10.0

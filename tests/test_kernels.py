@@ -1,0 +1,77 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp ref oracle
+(interpret=True executes the kernel body in Python on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.robust_agg import median_pallas, trimmed_mean_pallas
+
+MS = [2, 3, 5, 8, 16, 17, 32]
+NS = [1, 100, 128, 1000, 4096]
+DTYPES = [np.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m", MS)
+@pytest.mark.parametrize("n", [100, 1000])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_median_kernel_allclose(m, n, dtype):
+    rng = np.random.default_rng(m * 1000 + n)
+    x = jnp.asarray(rng.standard_normal((m, n)), dtype=dtype)
+    got = median_pallas(x, block=128, interpret=True)
+    want = ref.median_ref(x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("m,trim", [(5, 1), (10, 2), (16, 3), (20, 4), (32, 8)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_trimmed_mean_kernel_allclose(m, trim, dtype):
+    rng = np.random.default_rng(m)
+    x = jnp.asarray(rng.standard_normal((m, 777)), dtype=dtype)
+    got = trimmed_mean_pallas(x, trim=trim, block=128, interpret=True)
+    want = ref.trimmed_mean_ref(x, trim / m)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("n", NS)
+def test_median_padding_edges(n):
+    """Coordinate counts that don't divide the block size."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((7, n)), np.float32)
+    got = median_pallas(x, block=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.median(np.asarray(x), axis=0), rtol=1e-6)
+
+
+def test_ref_median_matches_numpy_even_odd():
+    rng = np.random.default_rng(0)
+    for m in (4, 5):
+        x = rng.standard_normal((m, 64)).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(ref.median_ref(jnp.asarray(x))), np.median(x, axis=0), rtol=1e-6
+        )
+
+
+def test_ops_dispatch_xla_backend():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((9, 3, 5)), np.float32)  # (m, ...) nd
+    got = ops.robust_aggregate(x, "median", backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.median(np.asarray(x), axis=0), rtol=1e-6)
+    got_t = ops.robust_aggregate(x, "trimmed_mean", beta=0.2, backend="xla")
+    assert got_t.shape == (3, 5)
+    got_p = ops.robust_aggregate(x, "median", backend="pallas")
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(got), rtol=1e-6)
+
+
+def test_kernel_adversarial_rows():
+    """Kernel (not just ref) keeps the median within the honest range."""
+    rng = np.random.default_rng(2)
+    honest = rng.standard_normal((9, 300)).astype(np.float32)
+    adv = np.full((4, 300), 1e30, np.float32)
+    x = jnp.asarray(np.concatenate([honest, adv]))
+    got = np.asarray(median_pallas(x, block=128, interpret=True))
+    assert (got <= honest.max(0)).all()

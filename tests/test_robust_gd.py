@@ -1,0 +1,130 @@
+"""Integration tests for Algorithm 1 (robust GD) and Algorithm 2 (one-round):
+the paper's core robustness claims as executable assertions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attacks import AttackConfig
+from repro.core.one_round import OneRoundConfig, make_gd_local_solver, one_round, quadratic_local_solver
+from repro.core.robust_gd import RobustGDConfig, make_worker_shards, run_linreg_experiment
+from repro.core import theory
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run(method, attack, n=200, m=20, beta=0.2, iters=60):
+    cfg = RobustGDConfig(method=method, beta=beta, step_size=0.5, num_iters=iters)
+    err, traj = run_linreg_experiment(KEY, d=20, n=n, m=m, sigma=0.5, cfg=cfg, attack=attack)
+    return float(err), np.asarray(traj)
+
+
+class TestRobustGD:
+    def test_clean_convergence_all_methods(self):
+        for method in ("mean", "median", "trimmed_mean"):
+            err, traj = _run(method, None)
+            assert err < 0.1, (method, err)
+            assert traj[-1] <= traj[0]
+
+    @pytest.mark.parametrize("attack_name", ["large_value", "sign_flip", "mean_shift"])
+    def test_median_robust_under_attacks(self, attack_name):
+        attack = AttackConfig(attack_name, alpha=0.15, scale=20.0, shift=20.0)
+        err_mean, _ = _run("mean", attack)
+        err_med, _ = _run("median", attack)
+        assert err_med < 0.2, err_med
+        assert err_mean > 5 * err_med, (err_mean, err_med)
+
+    def test_trimmed_mean_robust(self):
+        attack = AttackConfig("large_value", alpha=0.15, scale=50.0)
+        err, _ = _run("trimmed_mean", attack, beta=0.2)
+        assert err < 0.2
+
+    def test_error_increases_with_alpha(self):
+        """Theorem 1: statistical error grows with the Byzantine fraction."""
+        errs = []
+        for alpha in (0.0, 0.1, 0.2, 0.3):
+            attack = AttackConfig("mean_shift", alpha=alpha, shift=3.0)
+            err, _ = _run("median", attack, n=500, m=20, iters=80)
+            errs.append(err)
+        assert errs[-1] > errs[0]
+        # monotone-ish: allow small noise inversions between adjacent alphas
+        assert errs[3] >= errs[1] * 0.8
+
+    def test_error_decreases_with_n(self):
+        """Theorem 1: error ~ 1/sqrt(n) in the clean case."""
+        e_small, _ = _run("median", None, n=50, m=10, iters=80)
+        e_big, _ = _run("median", None, n=1600, m=10, iters=80)
+        assert e_big < e_small
+
+    def test_gaussian_features(self):
+        cfg = RobustGDConfig(method="median", step_size=0.3, num_iters=80)
+        err, _ = run_linreg_experiment(KEY, d=10, n=300, m=10, sigma=0.3,
+                                       cfg=cfg, features="gaussian")
+        assert float(err) < 0.15
+
+
+class TestOneRound:
+    def _data(self, m=20, n=100, d=10, sigma=0.3):
+        x = jax.random.normal(KEY, (m * n, d))
+        w_star = jnp.ones((d,))
+        y = x @ w_star + sigma * jax.random.normal(jax.random.PRNGKey(7), (m * n,))
+        return make_worker_shards((x, y), m), w_star
+
+    def test_quadratic_clean(self):
+        shards, w_star = self._data()
+        w = one_round(quadratic_local_solver, shards, OneRoundConfig("median"))
+        assert float(jnp.linalg.norm(w - w_star)) < 0.1
+
+    def test_quadratic_byzantine(self):
+        shards, w_star = self._data()
+        atk = AttackConfig("large_value", alpha=0.2, scale=100.0)
+        w_med = one_round(quadratic_local_solver, shards, OneRoundConfig("median"), atk)
+        w_mean = one_round(quadratic_local_solver, shards, OneRoundConfig("mean"), atk)
+        assert float(jnp.linalg.norm(w_med - w_star)) < 0.2
+        assert float(jnp.linalg.norm(w_mean - w_star)) > 1.0
+
+    def test_gd_solver_logistic(self):
+        """Paper Table 4 setting: one-round median on a non-quadratic loss."""
+        from repro.data.synthetic import mnist_analog
+        from repro.models.paper_models import init_logreg, logreg_loss
+
+        m, n, d, c = 10, 200, 20, 4
+        data = mnist_analog(KEY, m * n, d=d, num_classes=c)
+        shards = make_worker_shards((data["x"], data["y"]), m)
+        shards = {"x": shards[0], "y": shards[1]}
+        w0 = init_logreg(KEY, d=d, num_classes=c)
+        solver = make_gd_local_solver(
+            lambda w, b: logreg_loss(w, {"x": b["x"], "y": b["y"]}), w0, steps=100, lr=0.5)
+        atk = AttackConfig("large_value", alpha=0.2, scale=50.0)
+        w = one_round(solver, shards, OneRoundConfig("median"), atk)
+        # robust aggregate stays near the clean aggregate
+        w_clean = one_round(solver, shards, OneRoundConfig("mean"))
+        delta = jnp.linalg.norm(w["w"] - w_clean["w"]) / jnp.linalg.norm(w_clean["w"])
+        assert float(delta) < 0.5
+
+
+class TestTheory:
+    def test_c_eps_value_from_paper(self):
+        assert abs(theory.c_eps(1.0 / 6.0) - 4.0) < 0.01  # "C_ε ≈ 4 when ε = 1/6"
+
+    def test_phi_inv(self):
+        assert abs(theory._phi_inv(0.5)) < 1e-9
+        assert abs(theory._phi_inv(0.975) - 1.959964) < 1e-5
+
+    def test_rates_ordering(self):
+        # trimmed-mean rate <= median rate (extra 1/n term)
+        assert theory.optimal_rate(0.1, 100, 20) < theory.median_rate(0.1, 100, 20)
+        # lower bound below achievable rates
+        lb = theory.lower_bound(0.1, 100, 20, d=1)
+        assert lb <= theory.median_rate(0.1, 100, 20) * theory.c_eps(1 / 6) * 10
+
+    def test_median_condition_feasibility(self):
+        # feasible regime from the paper: small alpha, m >> d log(nm)
+        assert theory.median_condition(0.05, 1000, 20000, d=5, S=1.0) < 0.5
+        # infeasible: alpha near 1/2
+        assert theory.median_condition(0.45, 1000, 20000, d=5, S=1.0) > 0.5
+
+    def test_loglog_slope(self):
+        xs = [10, 100, 1000]
+        ys = [1.0 / (x ** 0.5) for x in xs]
+        assert abs(theory.loglog_slope(xs, ys) + 0.5) < 1e-6

@@ -98,9 +98,9 @@ INPUT_SHAPES = {
 class ParallelConfig:
     """How the paper's technique + sharding are applied."""
 
-    agg_method: str = "median"  # mean|median|trimmed_mean
+    agg_method: str = "median"  # mean|median|trimmed_mean|approx_median|approx_trimmed_mean
     agg_beta: float = 0.1
-    agg_strategy: str = "gather"  # gather|bucketed|hierarchical (paper-faithful default)
+    agg_strategy: str = "gather"  # gather|bucketed|hierarchical|chunked (paper-faithful default)
     param_mode: str = "replicated"  # replicated|fsdp (fsdp = robust reduce-scatter in bwd)
     remat: bool = True
     attn_chunk: int = 1024  # kv-block size for chunked attention (0 = plain)

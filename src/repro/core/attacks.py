@@ -33,7 +33,7 @@ class AttackConfig:
     coordinate-wise aggregators, which are permutation invariant).
     """
 
-    name: str = "none"  # none|label_flip|random_label|sign_flip|large_value|mean_shift|inner_product
+    name: str = "none"  # none|label_flip|random_label|sign_flip|large_value|alie|mean_shift|inner_product
     alpha: float = 0.0
     scale: float = 100.0  # magnitude used by large_value
     num_classes: int = 10  # used by label attacks
@@ -86,6 +86,43 @@ def apply_data_attack(cfg: AttackConfig, batch: dict, is_byzantine, key: Optiona
 
 # ------------------------------------------------------------ gradient space
 
+# attacks whose payload needs the honest per-coordinate variance
+NEEDS_VARIANCE = ("alie", "mean_shift")
+
+
+def byzantine_payload(cfg: AttackConfig, honest_mean: jax.Array,
+                      honest_var: Optional[jax.Array] = None) -> jax.Array:
+    """The bad-row value for a gradient-space attack, given the honest
+    statistics the omniscient colluders observe.
+
+    This is the single definition of the attack formulas: the
+    gathered-rows path (:func:`apply_gradient_attack`) computes the
+    statistics from the stacked matrix; the psum path
+    (``distributed._maybe_attack_chunked``) computes the identical
+    statistics with collectives — both feed them here, so the two paths
+    cannot drift. ``honest_var`` is required for ``NEEDS_VARIANCE``.
+    """
+    if cfg.name == "sign_flip":
+        return -cfg.scale * honest_mean
+    if cfg.name == "large_value":
+        return jnp.full_like(honest_mean, cfg.scale)
+    if cfg.name == "alie":
+        # "A Little Is Enough" (Baruch et al. 2019): colluding workers
+        # shift each coordinate by z_max standard deviations — the largest
+        # perturbation that still hides inside the honest spread, designed
+        # to defeat median/trimmed-mean-style defenses maximally.
+        # (cfg.shift plays the role of z_max — the number of honest
+        # standard deviations the colluders shift by)
+        return honest_mean - cfg.shift * jnp.sqrt(honest_var + 1e-12)
+    if cfg.name == "mean_shift":
+        # omniscient colluding attack: all Byzantine rows push the
+        # coordinate-wise statistics by a constant shift of the honest mean
+        return honest_mean + cfg.shift * jnp.sqrt(honest_var + 1e-12)
+    if cfg.name == "inner_product":
+        # push opposite to the honest mean direction, scaled to its norm
+        return -honest_mean
+    raise ValueError(f"unknown gradient attack {cfg.name!r}")
+
 
 def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array) -> jax.Array:
     """Replace Byzantine rows of a stacked per-worker array ``(m, ...)``.
@@ -101,28 +138,9 @@ def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array
     maskb = mask.reshape(bshape)
     n_honest = jnp.maximum(1, m - jnp.sum(mask))
     honest_mean = jnp.sum(jnp.where(maskb, 0, stacked), axis=0) / n_honest
-
-    if cfg.name == "sign_flip":
-        bad = -cfg.scale * honest_mean
-    elif cfg.name == "large_value":
-        bad = jnp.full_like(honest_mean, cfg.scale)
-    elif cfg.name == "alie":
-        # "A Little Is Enough" (Baruch et al. 2019): colluding workers
-        # shift each coordinate by z_max standard deviations — the largest
-        # perturbation that still hides inside the honest spread, designed
-        # to defeat median/trimmed-mean-style defenses maximally.
-        # (cfg.shift plays the role of z_max — the number of honest
-        # standard deviations the colluders shift by)
-        honest_var = jnp.sum(jnp.where(maskb, 0, (stacked - honest_mean) ** 2), axis=0) / n_honest
-        bad = honest_mean - cfg.shift * jnp.sqrt(honest_var + 1e-12)
-    elif cfg.name == "mean_shift":
-        # omniscient colluding attack: all Byzantine rows push the
-        # coordinate-wise statistics by a constant shift of the honest mean
-        honest_sq = jnp.sum(jnp.where(maskb, 0, (stacked - honest_mean) ** 2), axis=0) / n_honest
-        bad = honest_mean + cfg.shift * jnp.sqrt(honest_sq + 1e-12)
-    elif cfg.name == "inner_product":
-        # push opposite to the honest mean direction, scaled to its norm
-        bad = -honest_mean
-    else:
-        raise ValueError(f"unknown gradient attack {cfg.name!r}")
+    honest_var = None
+    if cfg.name in NEEDS_VARIANCE:
+        honest_var = jnp.sum(jnp.where(maskb, 0, (stacked - honest_mean) ** 2),
+                             axis=0) / n_honest
+    bad = byzantine_payload(cfg, honest_mean, honest_var)
     return jnp.where(maskb, jnp.broadcast_to(bad, stacked.shape), stacked)

@@ -24,11 +24,23 @@ Three exact strategies (identical estimator, different collective schedule):
               "robust reduce-scatter"): used by the FSDP integration where
               each worker only updates its own parameter shard.
 
-One approximate strategy:
+Two approximate strategies:
 
 ``hierarchical``  median-of-medians across pods (aggregate within pod,
               then across pods). Cheaper DCN traffic but a *different*
               estimator (documented in DESIGN.md); off by default.
+
+``chunked``   histogram-sketch aggregation via plain psums (the
+              federated-scale estimator of repro.fed / DESIGN.md
+              §Federated-scale): per-coordinate min/max by pmin/pmax,
+              then each worker psums its local one-hot bin counts/sums
+              and inverts the CDF locally. No per-worker rows are ever
+              gathered, so bytes ≈ (2 + 2·nbins)·|g| *independent of m*
+              — the only strategy whose collective volume does not grow
+              with the worker count. Approximate: error ≤ one bin width
+              (max−min)/nbins per coordinate. The coordinate space is
+              processed in ``coord_chunk`` slices to bound the (nbins,
+              chunk) sketch memory.
 
 Byzantine simulation: gradient-space attacks are applied where per-worker
 rows are visible, i.e. after the gather / all_to_all, using the row index
@@ -43,13 +55,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregators
+from repro.core import attacks as attacks_mod
 from repro.core.attacks import AttackConfig, apply_gradient_attack
+
+
+def _axis_size_one(a: str) -> int:
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    frame = jax.core.axis_frame(a)  # jax < 0.5 has no lax.axis_size
+    return frame if isinstance(frame, int) else frame.size
 
 
 def axis_size(axis_names: Sequence[str]) -> int:
     s = 1
     for a in axis_names:
-        s *= jax.lax.axis_size(a)
+        s *= _axis_size_one(a)
     return s
 
 
@@ -61,7 +81,7 @@ def worker_index(axis_names: Sequence[str]) -> jax.Array:
     """
     idx = jnp.int32(0)
     for a in axis_names:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size_one(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -142,7 +162,7 @@ def _robust_scatter_flat(
     """
     axis_names = tuple(axis_names)
     m = axis_size(axis_names)
-    sizes = tuple(jax.lax.axis_size(a) for a in axis_names)
+    sizes = tuple(_axis_size_one(a) for a in axis_names)
     size = flat.shape[0]
     bs = -(-size // m)  # ceil
     pad = bs * m - size
@@ -221,6 +241,108 @@ def robust_reduce_scatter(
 
 
 # --------------------------------------------------------------------------
+# chunked strategy (approximate: histogram sketch via psum, O(1) in m)
+# --------------------------------------------------------------------------
+
+
+def _maybe_attack_chunked(
+    flat: jax.Array,
+    attack: Optional[AttackConfig],
+    axis_names: Sequence[str],
+    m: int,
+) -> jax.Array:
+    """Byzantine simulation without gathered rows: this worker's local
+    flat gradient is replaced iff its worker index is under the attack's
+    Byzantine cut. The omniscient colluders' honest statistics are
+    reproduced with psums over the honest workers and fed to the shared
+    :func:`repro.core.attacks.byzantine_payload` formulas, so the chunked
+    strategy sees the identical threat model as gather/bucketed.
+    """
+    if attack is None or attack.alpha == 0.0 or attack.name in (
+            "none", "label_flip", "random_label"):
+        return flat
+    q = attack.num_byzantine(m)
+    if q == 0:
+        return flat
+    is_byz = worker_index(axis_names) < q
+    honest = jnp.where(is_byz, jnp.zeros_like(flat), flat)
+    honest_mean = jax.lax.psum(honest, axis_names) / (m - q)
+    honest_var = None
+    if attack.name in attacks_mod.NEEDS_VARIANCE:
+        dev = jnp.where(is_byz, jnp.zeros_like(flat), (flat - honest_mean) ** 2)
+        honest_var = jax.lax.psum(dev, axis_names) / (m - q)
+    bad = attacks_mod.byzantine_payload(attack, honest_mean, honest_var)
+    return jnp.where(is_byz, bad, flat)
+
+
+def robust_chunked_agg(
+    g,
+    axis_names: Sequence[str],
+    method: str = "median",
+    beta: float = 0.1,
+    attack: Optional[AttackConfig] = None,
+    agg_dtype=None,
+    nbins: int = 256,
+    coord_chunk: int = 16384,
+):
+    """Approximate robust aggregation with m-independent collective volume.
+
+    Per leaf: (1) pmin/pmax over the worker axes give the per-coordinate
+    bin range; (2) every worker histograms its own row locally (one-hot
+    counts and sums, (nbins, chunk)) and psums them — a plain all-reduce;
+    (3) the CDF is inverted locally (kernels/histogram_agg helpers), so
+    all workers hold the identical aggregated gradient, like ``gather``.
+
+    ``method``: ``median`` | ``trimmed_mean`` (order statistics from the
+    sketch) | ``mean`` (degenerate: one psum). Error ≤ one bin width
+    (max−min)/nbins per coordinate; exact for the mean.
+    """
+    from repro.kernels import histogram_agg as H
+
+    # chunked IS the histogram-sketch estimator, so the approx_* aggregator
+    # names (configs/CLIs) are aliases of their exact counterparts here
+    method = {"approx_median": "median",
+              "approx_trimmed_mean": "trimmed_mean"}.get(method, method)
+    axis_names = tuple(axis_names)
+    m = axis_size(axis_names)
+
+    def agg_leaf(leaf):
+        flat = leaf.reshape(-1)
+        if agg_dtype is not None:
+            flat = flat.astype(agg_dtype)
+        flat = flat.astype(jnp.float32)
+        flat = _maybe_attack_chunked(flat, attack, axis_names, m)
+        if method == "mean":
+            out = jax.lax.psum(flat, axis_names) / m
+            return out.reshape(leaf.shape).astype(leaf.dtype)
+        if method not in ("median", "trimmed_mean"):
+            raise ValueError(
+                f"chunked strategy supports mean|median|trimmed_mean, got {method!r}")
+        lo = jax.lax.pmin(flat, axis_names)
+        width = (jax.lax.pmax(flat, axis_names) - lo) / nbins
+        outs = []
+        for s in range(0, flat.shape[0], coord_chunk):
+            seg = flat[s : s + coord_chunk]
+            counts, sums = H.hist_update(
+                *H.hist_init(seg.shape[0], nbins,
+                             with_sums=(method == "trimmed_mean")),
+                seg[None, :], lo[s : s + coord_chunk], width[s : s + coord_chunk])
+            counts = jax.lax.psum(counts, axis_names)
+            if method == "median":
+                outs.append(H.median_from_hist(
+                    counts, lo[s : s + coord_chunk], width[s : s + coord_chunk], m))
+            else:
+                sums = jax.lax.psum(sums, axis_names)
+                outs.append(H.trimmed_mean_from_hist(
+                    counts, sums, lo[s : s + coord_chunk],
+                    width[s : s + coord_chunk], m, beta))
+        out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+        return out.reshape(leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(agg_leaf, g)
+
+
+# --------------------------------------------------------------------------
 # hierarchical strategy (approximate: median-of-medians across pods)
 # --------------------------------------------------------------------------
 
@@ -269,9 +391,7 @@ def make_robust_param_gather_dim(
         moved = jnp.moveaxis(ct, dim, 0)
         flat = moved.reshape(-1)
         shard_flat = robust_reduce_scatter(flat, axis_names, method, beta, attack)
-        m = 1
-        for a in axis_names:
-            m *= jax.lax.axis_size(a)
+        m = axis_size(axis_names)
         shard_shape = (moved.shape[0] // m,) + moved.shape[1:]
         shard = jnp.moveaxis(shard_flat.reshape(shard_shape), 0, dim)
         return (shard,)
@@ -307,9 +427,7 @@ def make_robust_param_gather(
     def bwd(_, ct):
         flat = ct.reshape(-1)
         shard = robust_reduce_scatter(flat, axis_names, method, beta, attack)
-        m = 1
-        for a in axis_names:
-            m *= jax.lax.axis_size(a)
+        m = axis_size(axis_names)
         # ct has shape (m * shard_rows, ...) == w_full; our shard is rows
         # [j*shard_rows : (j+1)*shard_rows]. robust_reduce_scatter returned
         # exactly those coordinates (flattened), so reshape back.

@@ -1,0 +1,20 @@
+"""Federated-scale client simulation + streaming robust aggregation.
+
+The paper's regime is m ≤ 64 worker *machines*; the ROADMAP north-star
+is cross-device federated scale, where a round samples a cohort of
+10³–10⁶ clients and the ``(m, d)`` gradient matrix can never be
+materialized. This package provides:
+
+- population.py: virtual client population (per-client data shards
+  derived from fold_in seeds, heterogeneity knobs, Byzantine
+  sub-population) with per-round cohort sampling;
+- streaming.py: chunked two-pass histogram aggregation (min/max, then
+  bin counts → CDF inversion) over a re-iterable stream of gradient
+  chunks — O(m·d) time, O(nbins·d) memory, error ≤ one bin width;
+- rounds.py: the server loop — cohort sampling, per-round attack
+  mixtures (AttackConfig), streaming aggregation, optimizer update;
+- run.py: ``python -m repro.fed.run`` CLI.
+
+See DESIGN.md §Federated-scale for the estimator/error discussion.
+"""
+from repro.fed import population, rounds, streaming  # noqa: F401

@@ -1,0 +1,97 @@
+"""CLI for the federated-scale simulation: ``python -m repro.fed.run``.
+
+Examples
+--------
+Clean 10⁴-client population, 2048-client cohorts, histogram median::
+
+    python -m repro.fed.run --clients 10000 --cohort 2048 --rounds 10
+
+10%% Byzantine sign-flip vs the non-robust mean baseline::
+
+    python -m repro.fed.run --alpha 0.1 --attack sign_flip --method stream_mean
+    python -m repro.fed.run --alpha 0.1 --attack sign_flip --method approx_median
+
+Attack mixture cycling sign_flip and alie each round::
+
+    python -m repro.fed.run --alpha 0.1 --attack sign_flip,alie
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.attacks import AttackConfig
+from repro.core import theory
+from repro.fed.population import ClientPopulation, PopulationConfig
+from repro.fed.rounds import AttackMixture, RoundConfig, run_rounds
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.fed.run",
+        description="Federated-scale Byzantine-robust simulation "
+                    "(streaming histogram aggregation)")
+    p.add_argument("--clients", type=int, default=10_000)
+    p.add_argument("--cohort", type=int, default=1024)
+    p.add_argument("--chunk", type=int, default=256)
+    p.add_argument("--rounds", type=int, default=10)
+    p.add_argument("--dim", type=int, default=64)
+    p.add_argument("--samples-per-client", type=int, default=32)
+    p.add_argument("--method", default="approx_median",
+                   help="approx_median|approx_trimmed_mean|stream_mean or any "
+                        "exact aggregator (median, trimmed_mean, mean, ...)")
+    p.add_argument("--beta", type=float, default=0.1)
+    p.add_argument("--nbins", type=int, default=256)
+    p.add_argument("--backend", default="auto", choices=["auto", "pallas", "xla"])
+    p.add_argument("--alpha", type=float, default=0.0,
+                   help="Byzantine fraction of the population")
+    p.add_argument("--attack", default="sign_flip",
+                   help="comma-separated per-round attack cycle "
+                        "(sign_flip, alie, large_value, mean_shift, inner_product)")
+    p.add_argument("--attack-scale", type=float, default=100.0)
+    p.add_argument("--attack-shift", type=float, default=1.0)
+    p.add_argument("--heterogeneity", type=float, default=0.0)
+    p.add_argument("--noise", type=float, default=1.0)
+    p.add_argument("--optimizer", default="sgd")
+    p.add_argument("--lr", type=float, default=0.2)
+    p.add_argument("--seed", type=int, default=0)
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    pcfg = PopulationConfig(
+        num_clients=args.clients, samples_per_client=args.samples_per_client,
+        dim=args.dim, alpha=args.alpha, heterogeneity=args.heterogeneity,
+        noise=args.noise, seed=args.seed)
+    pop = ClientPopulation(pcfg)
+    rcfg = RoundConfig(
+        num_rounds=args.rounds, cohort_size=args.cohort,
+        chunk_clients=args.chunk, method=args.method, beta=args.beta,
+        nbins=args.nbins, backend=args.backend, optimizer=args.optimizer,
+        lr=args.lr, seed=args.seed)
+    attacks = ()
+    if args.alpha > 0:
+        attacks = tuple(
+            AttackConfig(name=a.strip(), alpha=args.alpha,
+                         scale=args.attack_scale, shift=args.attack_shift)
+            for a in args.attack.split(",") if a.strip())
+    print(f"population: {pcfg.num_clients} clients "
+          f"({pcfg.num_byzantine()} Byzantine), d={pcfg.dim}, "
+          f"n={pcfg.samples_per_client}/client, "
+          f"heterogeneity={pcfg.heterogeneity}")
+    print(f"rounds: {rcfg.num_rounds} x cohort {rcfg.cohort_size} "
+          f"(chunks of {rcfg.chunk_clients}), method={rcfg.method}, "
+          f"nbins={rcfg.nbins}")
+    w, history = run_rounds(pop, rcfg, AttackMixture(attacks))
+    for h in history:
+        print(f"  round {h['round']:3d}  attack={h['attack']:<12s} "
+              f"|g|={h['grad_norm']:9.4f}  |w-w*|={h['err']:.4f}")
+    final = history[-1]["err"]
+    rate = theory.optimal_rate(args.alpha, args.samples_per_client, args.cohort)
+    print(f"final |w-w*| = {final:.4f}   "
+          f"(order-optimal rate alpha/sqrt(n)+1/sqrt(n*m) = {rate:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

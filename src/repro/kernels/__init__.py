@@ -1,8 +1,11 @@
 """Pallas TPU kernels for the paper's aggregation hot-spot.
 
 - robust_agg.py: pl.pallas_call kernels (odd-even sorting network over the
-  worker axis, (m, BLOCK) VMEM tiles)
+  worker axis, (m, BLOCK) VMEM tiles) — exact, small static m
+- histogram_agg.py: streaming two-pass histogram sketch kernels
+  (min/max + bin counts/sums) for federated-scale m, plus the pure-jnp
+  CDF-inversion helpers shared by fed.streaming and core.distributed
 - ops.py: jit'd dispatch wrappers (pallas on TPU, interpret/XLA on CPU)
 - ref.py: pure-jnp oracle used by the allclose tests
 """
-from repro.kernels import ops, ref, robust_agg  # noqa: F401
+from repro.kernels import histogram_agg, ops, ref, robust_agg  # noqa: F401

@@ -123,10 +123,12 @@ def main(argv=None):
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--all", action="store_true", help="run every combo on both meshes")
     ap.add_argument("--strategy", default="gather",
-                    choices=["gather", "bucketed", "hierarchical"])
+                    choices=["gather", "bucketed", "hierarchical", "chunked"])
     ap.add_argument("--param-mode", default="replicated", choices=["replicated", "fsdp"])
     ap.add_argument("--seq-parallel", action="store_true")
-    ap.add_argument("--agg", default="median", choices=["mean", "median", "trimmed_mean"])
+    ap.add_argument("--agg", default="median",
+                    choices=["mean", "median", "trimmed_mean",
+                             "approx_median", "approx_trimmed_mean"])
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--attn-chunk", type=int, default=1024)
     ap.add_argument("--remat", type=int, default=1)
@@ -149,8 +151,8 @@ def main(argv=None):
 
     # resume support: skip combos already recorded (ok/skipped) in --out
     def key(arch, shape, mesh):
-        return (arch, shape, mesh, args.strategy, args.param_mode, args.attn_chunk,
-                args.seq_parallel)
+        return (arch, shape, mesh, args.strategy, args.agg, args.param_mode,
+                args.attn_chunk, args.seq_parallel)
 
     done = set()
     if args.out and os.path.exists(args.out):
@@ -163,6 +165,7 @@ def main(argv=None):
                 if r.get("status") in ("ok", "skipped"):
                     done.add((r["arch"], r["shape"], r["mesh"],
                               r.get("strategy", "gather"),
+                              r.get("agg", "median"),
                               r.get("param_mode", "replicated"),
                               r.get("attn_chunk", 1024),
                               r.get("seq_parallel", False)))

@@ -344,6 +344,9 @@ def make_train_step(
         elif pcfg.agg_strategy == "bucketed":
             agg = distributed.robust_bucketed_agg(
                 grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype)
+        elif pcfg.agg_strategy == "chunked":
+            agg = distributed.robust_chunked_agg(
+                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype)
         elif pcfg.agg_strategy == "hierarchical" and len(waxes) == 2:
             agg = distributed.robust_hierarchical_agg(
                 grads, waxes[1], waxes[0], pcfg.agg_method, pcfg.agg_beta, attack)

@@ -41,9 +41,11 @@ def main(argv=None):
     ap.add_argument("--mesh", default="debug", choices=["debug", "single", "multi"])
     ap.add_argument("--workers", type=int, default=4, help="debug mesh data axis")
     ap.add_argument("--model-par", type=int, default=2, help="debug mesh model axis")
-    ap.add_argument("--agg", default="median", choices=["mean", "median", "trimmed_mean"])
+    ap.add_argument("--agg", default="median",
+                    choices=["mean", "median", "trimmed_mean",
+                             "approx_median", "approx_trimmed_mean"])
     ap.add_argument("--beta", type=float, default=0.25)
-    ap.add_argument("--strategy", default="gather", choices=["gather", "bucketed", "hierarchical"])
+    ap.add_argument("--strategy", default="gather", choices=["gather", "bucketed", "hierarchical", "chunked"])
     ap.add_argument("--attack", default="none")
     ap.add_argument("--attack-alpha", type=float, default=0.0)
     ap.add_argument("--optimizer", default="adamw")

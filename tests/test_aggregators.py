@@ -1,9 +1,34 @@
-"""Unit + property tests for the coordinate-wise aggregators (Defs 1-2)."""
+"""Unit + property tests for the coordinate-wise aggregators (Defs 1-2).
+
+``hypothesis`` is optional: without it the property tests skip and every
+plain unit test still collects and runs (the seed container does not
+ship hypothesis).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip, unit tests still run
+    def given(*_args, **_kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Absorbs strategy construction at decoration time (st.floats(...),
+        .flatmap(...), ...) so module-level @given args still evaluate."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: _StrategyStub()
+
+        def __call__(self, *a, **k):
+            return _StrategyStub()
+
+    st = _StrategyStub()
 
 from repro.core import aggregators as agg
 

@@ -1,8 +1,26 @@
 """Micro-benchmarks of the aggregation operators themselves (the op the
-Pallas kernel targets): wall time per call on CPU for the XLA-sort path
-and the interpret-mode kernel, across worker counts and gradient sizes.
-Interpret mode is a correctness vehicle, not a perf claim — the perf
-story on real TPUs is in EXPERIMENTS.md §Roofline/§Perf.
+Pallas kernel targets): wall time per call on CPU across worker counts
+and gradient sizes for
+
+- ``*_xla``         the ``jnp.sort``-based reference (the baseline);
+- ``*_net_full``    the UNpruned O(m²) odd-even transposition network
+                    (what the pre-selection kernel unrolled);
+- ``*_net_pruned``  the dead-wire-eliminated selection program
+                    (kernels/selection_network.py) — the production path;
+- ``fused_net``     median + trimmed mean from ONE pass (union rank set).
+
+All variants are jit-compiled XLA programs, so the comparison is real
+compute, not interpreter overhead; the Pallas interpret-mode kernels are
+deliberately excluded on CPU (they execute the kernel body in Python per
+grid step — a correctness vehicle, not a perf claim; the TPU story is in
+EXPERIMENTS.md §Roofline/§Perf). The ``derived`` CSV column carries the
+speedup over the matching XLA-sort baseline and the comparator counts
+full→pruned.
+
+Sweep: m ∈ {8, 16, 32, 64} at d = 2¹⁶, plus the headline d = 2²⁰ point
+at m ∈ {16, 32} (the ROADMAP's deployment sizes; larger (m, d) combos of
+the sort baseline run for minutes on CPU and are skipped — noted in the
+output so the cap is visible). ``smoke=True`` shrinks the sweep for CI.
 """
 from __future__ import annotations
 
@@ -13,36 +31,92 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
-from repro.kernels import ops, ref
+from repro.kernels import ref, selection_network as SN
 
 
-def _time(fn, *args, reps=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+def _time(fn, *args, reps: int = 5) -> float:
+    """µs/call over ``reps`` timed calls after exactly ONE warm-up call.
+
+    The warm-up both compiles and absorbs first-call cost; earlier
+    versions of this helper evaluated ``fn`` twice before timing (an
+    ``isinstance`` probe plus the warm-up), double-compiling and
+    inflating first-call cost.
+    """
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(verbose: bool = True):
+def _trim(m: int) -> int:
+    return max(1, m // 10)  # beta = 0.1
+
+
+def _median_full_network(x):
+    m = x.shape[0]
+    rows = SN.apply_network([x[i] for i in range(m)], SN.transposition_network(m))
+    return SN.median_from_rows(rows, m, x.dtype)
+
+
+def _variants(m: int):
+    t = _trim(m)
+    med_prog, tm_prog = SN.median_program(m), SN.trimmed_program(m, t)
+    fused_prog = SN.fused_program(m, t)
+    full = len(SN.transposition_network(m))
+    return [
+        # (op, fn, baseline_op, comparator-count note)
+        ("mean", jax.jit(lambda v: jnp.mean(v, axis=0)), None, ""),
+        ("median_xla", jax.jit(ref.median_ref), None, ""),
+        ("median_net_full", jax.jit(_median_full_network), "median_xla",
+         f"cmp{full}"),
+        ("median_net_pruned", jax.jit(SN.median_select), "median_xla",
+         f"cmp{full}->{med_prog.size}"),
+        ("trimmed_xla", jax.jit(lambda v: ref.trimmed_mean_ref(v, 0.1)), None, ""),
+        ("trimmed_net_pruned", jax.jit(lambda v: SN.trimmed_mean_select(v, t)),
+         "trimmed_xla", f"cmp{full}->{tm_prog.size}"),
+        # one pass for BOTH estimators; baseline = two separate sorts
+        ("fused_net", jax.jit(lambda v: SN.median_and_trimmed_select(v, t)),
+         "fused_xla", f"cmp{fused_prog.size}"),
+    ]
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    """Returns a list of record dicts (op, m, d, us, speedup) — the rows
+    of BENCH_agg.json when benchmarks.run is invoked with ``--json``."""
     rng = np.random.default_rng(0)
-    out = []
-    for m in (16, 32):
-        for size in (1 << 16, 1 << 20):
-            x = jnp.asarray(rng.standard_normal((m, size)), jnp.float32)
-            med = jax.jit(ref.median_ref)
-            t_xla = _time(med, x)
-            tm = jax.jit(lambda v: ref.trimmed_mean_ref(v, 0.1))
-            t_trim = _time(tm, x)
-            mean = jax.jit(lambda v: jnp.mean(v, axis=0))
-            t_mean = _time(mean, x)
-            out.append((m, size, t_mean, t_xla, t_trim))
+    if smoke:
+        combos = [(8, 1 << 14), (32, 1 << 14)]
+        reps = 3
+    else:
+        combos = ([(m, 1 << 16) for m in (8, 16, 32, 64)]
+                  + [(16, 1 << 20), (32, 1 << 20)])
+        reps = 5
+        if verbose:
+            print("# note: d=2^20 runs m in {16,32} only — the XLA-sort "
+                  "baseline needs minutes/call on CPU beyond that")
+    records = []
+    for m, d in combos:
+        x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        base_us = {}
+        for op, fn, baseline, note in _variants(m):
+            us = _time(fn, x, reps=reps)
+            base_us[op] = us
+            if baseline == "fused_xla":
+                # fair baseline for the fused op: both sort-based estimators
+                base = base_us["median_xla"] + base_us["trimmed_xla"]
+            elif baseline:
+                base = base_us[baseline]
+            else:
+                base = None
+            speedup = (base / us) if base else None
+            records.append({"op": op, "m": m, "d": d, "us": round(us, 1),
+                            "speedup": round(speedup, 2) if speedup else None})
             if verbose:
-                print(row(f"agg/mean_m{m}_n{size}", t_mean, ""))
-                print(row(f"agg/median_xla_m{m}_n{size}", t_xla,
-                          f"{t_xla / max(t_mean, 1e-9):.1f}x_mean"))
-                print(row(f"agg/trimmed_xla_m{m}_n{size}", t_trim, ""))
-    return out
+                derived = "_".join(
+                    s for s in ((f"{speedup:.1f}x" if speedup else ""), note) if s)
+                print(row(f"agg/{op}_m{m}_d{d}", us, derived))
+    return records
 
 
 if __name__ == "__main__":

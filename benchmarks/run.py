@@ -1,26 +1,62 @@
 """Benchmark harness: one entry per paper table/figure + rate scalings +
-aggregation micro-bench. Prints ``name,us_per_call,derived`` CSV.
+aggregation micro-bench. Prints ``name,us_per_call,derived`` CSV and
+exits non-zero if any requested suite fails (so CI can gate on it).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only table2,rates
+  PYTHONPATH=src python -m benchmarks.run --only agg --json --smoke --gate-agg
+
+``--json [PATH]`` writes the agg micro-bench records (op, m, d, µs/call,
+speedup vs the XLA-sort baseline) to PATH (default BENCH_agg.json) — the
+perf-trajectory artifact CI uploads on every run. ``--gate-agg``
+additionally fails the run if the pruned selection network is not at
+least as fast as the XLA-sort median baseline at m=32.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg"]
 
+GATE_M = 32  # the gated worker count (the ROADMAP's deployment size)
+
+
+def _gate_agg(records) -> list:
+    """Pruned-network medians must beat (or tie) the sort baseline."""
+    problems = []
+    gated = [r for r in records
+             if r["op"] == "median_net_pruned" and r["m"] == GATE_M]
+    if not gated:
+        problems.append(f"no median_net_pruned record at m={GATE_M}")
+    for r in gated:
+        if r["speedup"] is None or r["speedup"] < 1.0:
+            problems.append(
+                f"median_net_pruned m={r['m']} d={r['d']}: speedup "
+                f"{r['speedup']} < 1.0 vs XLA sort")
+    return problems
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--json", nargs="?", const="BENCH_agg.json", default=None,
+                    metavar="PATH",
+                    help="write the agg micro-bench records to PATH "
+                         "(default BENCH_agg.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken agg sweep for CI wall-clock budgets")
+    ap.add_argument("--gate-agg", action="store_true",
+                    help=f"fail unless pruned >= XLA-sort baseline at m={GATE_M}")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else SUITES
 
     print("name,us_per_call,derived")
     failed = []
+    agg_records = None
     for suite in only:
         try:
             if suite == "table2":
@@ -39,10 +75,29 @@ def main() -> None:
                 from benchmarks import agg_microbench as mod
             else:
                 raise ValueError(f"unknown suite {suite}")
-            mod.run(verbose=True)
+            if suite == "agg":
+                agg_records = mod.run(verbose=True, smoke=args.smoke)
+            else:
+                mod.run(verbose=True)
         except Exception:  # noqa: BLE001
             failed.append(suite)
             traceback.print_exc()
+
+    if args.json is not None and agg_records is not None:
+        payload = {"suite": "agg", "smoke": args.smoke,
+                   "baseline": "median_xla/trimmed_xla (jnp.sort)",
+                   "records": agg_records}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json} ({len(agg_records)} records)", file=sys.stderr)
+
+    if args.gate_agg:
+        problems = _gate_agg(agg_records or [])
+        for p in problems:
+            print(f"GATE agg: {p}", file=sys.stderr)
+        if problems:
+            failed.append("agg-gate")
+
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

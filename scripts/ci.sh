@@ -3,6 +3,9 @@
 #
 #   scripts/ci.sh        full tier-1 suite
 #   scripts/ci.sh fast   quick subset (-m fast) for per-push feedback
+#   scripts/ci.sh bench  agg micro-bench smoke: writes BENCH_agg.json and
+#                        FAILS if the pruned selection network is slower
+#                        than the XLA-sort median baseline at m=32
 #
 # Tracks the seed baseline instead of leaving it silent: some tests are
 # env-dependent (newer-jax shard_map API, TPU-only lowerings) — the
@@ -16,5 +19,8 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 if [ "${1:-}" = "fast" ]; then
     exec python -m pytest -q -m fast
+fi
+if [ "${1:-}" = "bench" ]; then
+    exec python -m benchmarks.run --only agg --json BENCH_agg.json --smoke --gate-agg
 fi
 exec python -m pytest -q

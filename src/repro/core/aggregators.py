@@ -23,13 +23,50 @@ def coordinate_mean(x: jax.Array) -> jax.Array:
     return jnp.mean(x, axis=0)
 
 
+# Worker counts up to NETWORK_MAX_M run on the pruned selection network
+# (kernels/selection_network.py, which owns the constant) instead of a
+# full jnp.sort: the median program for m=32 is 157 static min/max ops vs
+# the general sort's O(m·log m) comparator+permute machinery per
+# coordinate.  Above it, jnp.sort (or the top_k partial selection below)
+# takes over.  Imported lazily to keep this module kernel-free at import.
+
+
+def _network_max_m() -> int:
+    from repro.kernels.selection_network import NETWORK_MAX_M
+
+    return NETWORK_MAX_M
+
+
+def _trimmed_mean_topk(x: jax.Array, b: int) -> jax.Array:
+    """β-trimmed mean via partial selection: kept-band sum = total − (sum
+    of the b largest) − (sum of the b smallest), each from ``lax.top_k``.
+
+    O(m·b)-ish work per coordinate instead of the full O(m·log m) sort —
+    the winning path for m beyond the network limit when the trim band's
+    *complement* is small (crossover ≈ b ≲ m/8; above that the two top_k
+    passes approach sort cost and jnp.sort wins).
+    """
+    m = x.shape[0]
+    xf = jnp.moveaxis(x.astype(jnp.float32), 0, -1)  # (..., m)
+    total = jnp.sum(xf, axis=-1)
+    top = jnp.sum(jax.lax.top_k(xf, b)[0], axis=-1)
+    bot = -jnp.sum(jax.lax.top_k(-xf, b)[0], axis=-1)
+    return ((total - top - bot) / (m - 2 * b)).astype(x.dtype)
+
+
 def coordinate_median(x: jax.Array) -> jax.Array:
     """Coordinate-wise median over the worker axis (paper Definition 1).
 
     For even ``m`` this is the average of the two middle order statistics,
-    matching ``jnp.median``.
+    matching ``jnp.median``.  Small static m (the data-parallel regime)
+    dispatches through the pruned selection network; larger m falls back
+    to the full sort.
     """
     m = x.shape[0]
+    if 2 <= m <= _network_max_m():
+        from repro.kernels import selection_network as SN
+
+        return SN.median_select(x)
     s = jnp.sort(x, axis=0)
     if m % 2 == 1:
         return s[m // 2]
@@ -44,6 +81,10 @@ def coordinate_trimmed_mean(x: jax.Array, beta: float) -> jax.Array:
 
     Removes the largest and smallest ``floor(beta * m)`` entries per
     coordinate and averages the rest. ``beta`` must be in [0, 1/2).
+    Dispatch: selection network for small static m; ``lax.top_k``
+    partial selection for large m with a small trim count (only the
+    boundary statistics are needed, not a full sort — see
+    :func:`_trimmed_mean_topk` for the crossover); full sort otherwise.
     """
     if not 0.0 <= beta < 0.5:
         raise ValueError(f"beta must be in [0, 1/2), got {beta}")
@@ -53,6 +94,12 @@ def coordinate_trimmed_mean(x: jax.Array, beta: float) -> jax.Array:
         raise ValueError(f"trim count 2*{b} >= m={m}")
     if b == 0:
         return coordinate_mean(x)
+    if m <= _network_max_m():
+        from repro.kernels import selection_network as SN
+
+        return SN.trimmed_mean_select(x, b)
+    if b <= m // 8:
+        return _trimmed_mean_topk(x, b)
     s = jnp.sort(x, axis=0)
     kept = s[b : m - b]
     return jnp.mean(kept.astype(jnp.float32), axis=0).astype(x.dtype)

@@ -18,7 +18,9 @@ Three exact strategies (identical estimator, different collective schedule):
               gradient. Bytes ≈ 2·|g| per device — the same volume as a
               plain all-reduce, i.e. Byzantine robustness at (almost) no
               extra bandwidth. Exact because coordinate-wise aggregators
-              are embarrassingly parallel across coordinates.
+              are embarrassingly parallel across coordinates. Small
+              leaves are coalesced into size-binned super-buckets so the
+              collective launch count is O(#size-bins), not O(#leaves).
 
 ``rs``        like ``bucketed`` but *leaves the result scattered* (a
               "robust reduce-scatter"): used by the FSDP integration where
@@ -49,7 +51,7 @@ rows are visible, i.e. after the gather / all_to_all, using the row index
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -185,6 +187,42 @@ def _robust_scatter_flat(
     return out.astype(flat.dtype), size
 
 
+# Element cap per coalesced super-bucket (16 MiB in f32): small leaves
+# batch into one collective, while the concat copy a group pays stays
+# bounded — the failure mode of the all-leaves 'flat' concat that
+# EXPERIMENTS.md §Perf iteration 1 measured at ~4× HBM traffic on grok-1.
+_COALESCE_MAX_ELEMS = 1 << 22
+
+
+def _coalesce_groups(leaves, max_elems: int = _COALESCE_MAX_ELEMS):
+    """Group leaf indices into size-binned super-buckets.
+
+    Leaves are binned by (dtype, floor(log2(size))); within a bin they
+    pack greedily into groups whose total stays ≤ ``max_elems`` (always
+    ≥ 1 leaf per group). A pytree of many small leaves — every bias and
+    norm scale of a transformer — thus costs O(#size-bins) collective
+    launches instead of O(#leaves), without reintroducing an unbounded
+    concat. Deterministic in leaf order, so every worker builds the
+    identical grouping (a divergent grouping would deadlock the
+    collectives).
+    """
+    bins: Dict[tuple, list] = {}
+    for idx, leaf in enumerate(leaves):
+        key = (str(jnp.result_type(leaf)), max(int(leaf.size), 1).bit_length())
+        bins.setdefault(key, []).append(idx)
+    groups = []
+    for key in sorted(bins):
+        cur, cur_elems = [], 0
+        for idx in bins[key]:
+            if cur and cur_elems + leaves[idx].size > max_elems:
+                groups.append(cur)
+                cur, cur_elems = [], 0
+            cur.append(idx)
+            cur_elems += leaves[idx].size
+        groups.append(cur)
+    return groups
+
+
 def robust_bucketed_agg(
     g,
     axis_names: Sequence[str],
@@ -196,26 +234,39 @@ def robust_bucketed_agg(
 ):
     """Exact robust aggregation with all-reduce-like byte volume.
 
-    per leaf (or the flat concat): all_to_all buckets → aggregate own
-    bucket → all_gather. Returns the full aggregated pytree (replicated
-    across worker axes).
+    per super-bucket (or the flat concat): all_to_all buckets → aggregate
+    own bucket → all_gather. Returns the full aggregated pytree
+    (replicated across worker axes).
 
-    ``granularity='leaf'`` (default) buckets each gradient leaf
-    independently — no concat copy of the full gradient, which matters at
-    100B+ scale (EXPERIMENTS.md §Perf iteration 1 found the flat concat
-    multiplied grok-1's HBM traffic ~4×). ``'flat'`` keeps the original
-    single-bucket-space formulation (fewer, larger collectives — fine for
-    small models).
+    ``granularity='leaf'`` (default) coalesces leaves into size-binned
+    super-buckets (see :func:`_coalesce_groups`): small leaves share one
+    all_to_all + all_gather pair instead of paying a collective launch
+    each, while large leaves still go alone — no concat copy of the full
+    gradient, which matters at 100B+ scale (EXPERIMENTS.md §Perf
+    iteration 1 found the flat concat multiplied grok-1's HBM traffic
+    ~4×). Exact regardless of grouping: coordinate-wise aggregators are
+    embarrassingly parallel across coordinates, and the gradient-space
+    attacks are row-broadcast formulas, so concatenating coordinates
+    changes nothing. ``'flat'`` keeps the original single-bucket-space
+    formulation (one collective pair for everything — fine for small
+    models).
     """
     if granularity == "leaf":
-        def agg_leaf(leaf):
-            flat = leaf.reshape(-1)
+        leaves, treedef = jax.tree.flatten(g)
+        out_leaves = [None] * len(leaves)
+        for grp in _coalesce_groups(leaves):
+            flat = (leaves[grp[0]].reshape(-1) if len(grp) == 1 else
+                    jnp.concatenate([leaves[i].reshape(-1) for i in grp]))
             mine, size = _robust_scatter_flat(flat, axis_names, method, beta,
                                               attack, agg_dtype)
-            full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)
-            return full[:size].reshape(leaf.shape).astype(leaf.dtype)
-
-        return jax.tree.map(agg_leaf, g)
+            full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)[:size]
+            off = 0
+            for i in grp:
+                leaf = leaves[i]
+                out_leaves[i] = (full[off : off + leaf.size]
+                                 .reshape(leaf.shape).astype(leaf.dtype))
+                off += leaf.size
+        return jax.tree.unflatten(treedef, out_leaves)
     flat, aux = _flatten_tree(g)
     mine, size = _robust_scatter_flat(flat, axis_names, method, beta, attack, agg_dtype)
     full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)
@@ -293,6 +344,14 @@ def robust_chunked_agg(
     (3) the CDF is inverted locally (kernels/histogram_agg helpers), so
     all workers hold the identical aggregated gradient, like ``gather``.
 
+    The coordinate space is processed in ``coord_chunk`` slices to bound
+    the (nbins, chunk) sketch memory. Each chunk issues ONE psum: the
+    counts and (for the trimmed mean) sums planes are concatenated into a
+    single (2·nbins, chunk) buffer before the collective, halving the
+    per-chunk launch count, and the chunk loop is a ``lax.scan`` — trace
+    size (and therefore compile time) is O(1) in the number of chunks
+    instead of O(#chunks) of inlined sketch bodies.
+
     ``method``: ``median`` | ``trimmed_mean`` (order statistics from the
     sketch) | ``mean`` (degenerate: one psum). Error ≤ one bin width
     (max−min)/nbins per coordinate; exact for the mean.
@@ -318,25 +377,40 @@ def robust_chunked_agg(
         if method not in ("median", "trimmed_mean"):
             raise ValueError(
                 f"chunked strategy supports mean|median|trimmed_mean, got {method!r}")
+        with_sums = method == "trimmed_mean"
         lo = jax.lax.pmin(flat, axis_names)
         width = (jax.lax.pmax(flat, axis_names) - lo) / nbins
-        outs = []
-        for s in range(0, flat.shape[0], coord_chunk):
-            seg = flat[s : s + coord_chunk]
+        size = flat.shape[0]
+        chunk = min(coord_chunk, size)
+        nchunks = -(-size // chunk)
+        pad = nchunks * chunk - size
+        if pad:
+            # padded coords get lo=0/width=0 → all mass in bin 0, value 0;
+            # sliced off below
+            flat = jnp.pad(flat, (0, pad))
+            lo = jnp.pad(lo, (0, pad))
+            width = jnp.pad(width, (0, pad))
+
+        def body(_, xs):
+            seg, slo, sw = xs
             counts, sums = H.hist_update(
-                *H.hist_init(seg.shape[0], nbins,
-                             with_sums=(method == "trimmed_mean")),
-                seg[None, :], lo[s : s + coord_chunk], width[s : s + coord_chunk])
-            counts = jax.lax.psum(counts, axis_names)
+                *H.hist_init(chunk, nbins, with_sums=with_sums),
+                seg[None, :], slo, sw)
+            packed = jnp.concatenate([counts, sums]) if with_sums else counts
+            packed = jax.lax.psum(packed, axis_names)  # one collective/chunk
+            counts = packed[:nbins]
             if method == "median":
-                outs.append(H.median_from_hist(
-                    counts, lo[s : s + coord_chunk], width[s : s + coord_chunk], m))
+                out = H.median_from_hist(counts, slo, sw, m)
             else:
-                sums = jax.lax.psum(sums, axis_names)
-                outs.append(H.trimmed_mean_from_hist(
-                    counts, sums, lo[s : s + coord_chunk],
-                    width[s : s + coord_chunk], m, beta))
-        out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+                out = H.trimmed_mean_from_hist(counts, packed[nbins:], slo, sw,
+                                               m, beta)
+            return None, out
+
+        _, outs = jax.lax.scan(
+            body, None,
+            (flat.reshape(nchunks, chunk), lo.reshape(nchunks, chunk),
+             width.reshape(nchunks, chunk)))
+        out = outs.reshape(-1)[:size]
         return out.reshape(leaf.shape).astype(leaf.dtype)
 
     return jax.tree.map(agg_leaf, g)

@@ -98,33 +98,59 @@ def streaming_aggregate(
     or ``trimmed_mean`` (the order-statistic aggregators; ``mean`` needs
     no sketch — a running sum does it — and is included for baselines).
     """
-    if method == "mean":
-        total = jnp.zeros((d,), jnp.float32)
-        m = 0
-        for j in range(num_chunks):
-            c = chunk_fn(j)
-            total = total + jnp.sum(c.astype(jnp.float32), axis=0)
-            m += c.shape[0]
-        return total / m
+    return streaming_aggregate_multi(
+        chunk_fn, num_chunks, d, (method,), beta, cfg)[method]
 
-    mm = minmax_init(d)
+
+def streaming_aggregate_multi(
+    chunk_fn: Callable[[int], jax.Array],
+    num_chunks: int,
+    d: int,
+    methods: tuple = ("median", "trimmed_mean"),
+    beta: float = 0.1,
+    cfg: SketchConfig = SketchConfig(),
+) -> dict:
+    """Several estimators from ONE shared sketch; returns {method: (d,)}.
+
+    The counts/sums sketch is method-independent, so evaluating median
+    AND trimmed mean (the pair every robustness comparison wants) costs
+    one two-pass stream instead of two — the streaming analogue of the
+    fused selection kernel (kernels/robust_agg.fused_median_trimmed_pallas).
+    ``mean`` rides along on the pass-1 stream for free.
+    """
+    methods = tuple(methods)
+    unknown = [mt for mt in methods if mt not in ("mean", "median", "trimmed_mean")]
+    if unknown:
+        raise ValueError(f"unknown streaming method(s) {unknown!r}")
+    out = {}
+    need_sketch = [mt for mt in methods if mt != "mean"]
+    total = jnp.zeros((d,), jnp.float32) if "mean" in methods else None
+    mm = minmax_init(d) if need_sketch else None
     m = 0
     for j in range(num_chunks):
         c = chunk_fn(j)
         m += c.shape[0]
-        mm = minmax_update(mm, c, cfg)
+        if total is not None:
+            total = total + jnp.sum(c.astype(jnp.float32), axis=0)
+        if mm is not None:
+            mm = minmax_update(mm, c, cfg)
+    if total is not None:
+        out["mean"] = total / m
+    if not need_sketch:
+        return out
     lo, width = edges_from_minmax(mm, cfg.nbins)
 
-    hist = H.hist_init(d, cfg.nbins, with_sums=(method == "trimmed_mean"))
+    hist = H.hist_init(d, cfg.nbins, with_sums=("trimmed_mean" in need_sketch))
     for j in range(num_chunks):
         hist = hist_update(hist, chunk_fn(j), lo, width, cfg)
     counts, sums = hist
 
-    if method == "median":
-        return H.median_from_hist(counts, lo, width, m)
-    if method == "trimmed_mean":
-        return H.trimmed_mean_from_hist(counts, sums, lo, width, m, beta)
-    raise ValueError(f"unknown streaming method {method!r}")
+    if "median" in need_sketch:
+        out["median"] = H.median_from_hist(counts, lo, width, m)
+    if "trimmed_mean" in need_sketch:
+        out["trimmed_mean"] = H.trimmed_mean_from_hist(
+            counts, sums, lo, width, m, beta)
+    return out
 
 
 def aggregate_array_chunked(

@@ -1,11 +1,16 @@
 """Pallas TPU kernels for the paper's aggregation hot-spot.
 
-- robust_agg.py: pl.pallas_call kernels (odd-even sorting network over the
-  worker axis, (m, BLOCK) VMEM tiles) — exact, small static m
+- selection_network.py: pruned compare-exchange DAG generator (Batcher
+  odd-even mergesort + dead-wire elimination for requested rank sets) —
+  the order-statistic engine every exact path runs on
+- robust_agg.py: pl.pallas_call kernels executing the pruned selection
+  programs on (m, BLOCK) VMEM tiles, incl. the fused median+trimmed-mean
+  single-pass kernel — exact, small static m
 - histogram_agg.py: streaming two-pass histogram sketch kernels
   (min/max + bin counts/sums) for federated-scale m, plus the pure-jnp
   CDF-inversion helpers shared by fed.streaming and core.distributed
-- ops.py: jit'd dispatch wrappers (pallas on TPU, interpret/XLA on CPU)
-- ref.py: pure-jnp oracle used by the allclose tests
+- ops.py: jit'd dispatch wrappers (pallas on TPU, network/XLA on CPU)
+- ref.py: pure-jnp jnp.sort oracle used by the allclose tests
 """
-from repro.kernels import histogram_agg, ops, ref, robust_agg  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    histogram_agg, ops, ref, robust_agg, selection_network)

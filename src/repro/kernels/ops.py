@@ -2,9 +2,16 @@
 
 ``robust_aggregate(x, method, beta)`` accepts any (m, ...) array, flattens
 the coordinate space, dispatches to the Pallas kernel (interpret mode on
-CPU, Mosaic on TPU), and restores the shape. The XLA-sort fallback
-(``backend='xla'``) is what the distributed reductions use on the CPU
-dry-run backend, where Mosaic cannot lower.
+CPU, Mosaic on TPU), and restores the shape. Backends:
+
+- ``pallas``   the selection-network Pallas kernels (Mosaic on TPU);
+- ``network``  the same pruned selection program executed as unrolled
+  jnp min/max — XLA-compiled, the fast CPU path and the benchmark
+  subject (no interpreter overhead, no sort machinery);
+- ``xla``      the jnp.sort oracle — the baseline the network paths are
+  measured against, and the fallback for m above the network limit.
+
+``fused_median_trimmed`` returns median AND trimmed mean from one pass.
 """
 from __future__ import annotations
 
@@ -13,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref, robust_agg
+from repro.kernels import ref, robust_agg, selection_network as SN
+from repro.kernels.selection_network import NETWORK_MAX_M
 
 
 def _on_tpu() -> bool:
@@ -24,32 +32,66 @@ def robust_aggregate(
     x: jax.Array,
     method: str = "median",
     beta: float = 0.1,
-    backend: str = "auto",  # auto|pallas|xla
+    backend: str = "auto",  # auto|pallas|network|xla
     block: int = 1024,
 ) -> jax.Array:
     """Aggregate (m, ...) -> (...) coordinate-wise with the given method."""
     m = x.shape[0]
     flat = x.reshape(m, -1)
-    use_pallas = backend == "pallas" or (backend == "auto" and _on_tpu())
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else (
+            "network" if 2 <= m <= NETWORK_MAX_M else "xla")
     interpret = not _on_tpu()
     if method == "median":
-        out = (
-            robust_agg.median_pallas(flat, block=block, interpret=interpret)
-            if use_pallas
-            else ref.median_ref(flat)
-        )
+        if backend == "pallas":
+            out = robust_agg.median_pallas(flat, block=block, interpret=interpret)
+        elif backend == "network":
+            out = SN.median_select(flat)
+        else:
+            out = ref.median_ref(flat)
     elif method == "trimmed_mean":
         trim = int(beta * m)
-        out = (
-            robust_agg.trimmed_mean_pallas(flat, trim, block=block, interpret=interpret)
-            if use_pallas
-            else ref.trimmed_mean_ref(flat, beta)
-        )
+        if backend == "pallas":
+            out = robust_agg.trimmed_mean_pallas(flat, trim, block=block,
+                                                 interpret=interpret)
+        elif backend == "network":
+            out = (SN.trimmed_mean_select(flat, trim) if trim
+                   else jnp.mean(flat.astype(jnp.float32), axis=0).astype(flat.dtype))
+        else:
+            out = ref.trimmed_mean_ref(flat, beta)
     elif method == "mean":
         out = jnp.mean(flat.astype(jnp.float32), axis=0).astype(flat.dtype)
     else:
         raise ValueError(f"unknown method {method!r}")
     return out.reshape(x.shape[1:])
+
+
+def fused_median_trimmed(
+    x: jax.Array,
+    beta: float = 0.1,
+    backend: str = "auto",  # auto|pallas|network|xla
+    block: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    """(median, trimmed_mean) of (m, ...) from ONE pass over the rows.
+
+    The fused selection program computes the union rank set, so the two
+    estimators share every compare-exchange and the (m, d) matrix is read
+    from HBM once — the shape the robustness benchmark matrix wants.
+    """
+    m = x.shape[0]
+    trim = int(beta * m)
+    flat = x.reshape(m, -1)
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else (
+            "network" if 2 <= m <= NETWORK_MAX_M else "xla")
+    if backend == "pallas":
+        med, tm = robust_agg.fused_median_trimmed_pallas(
+            flat, trim, block=block, interpret=not _on_tpu())
+    elif backend == "network":
+        med, tm = SN.median_and_trimmed_select(flat, trim)
+    else:
+        med, tm = ref.median_ref(flat), ref.trimmed_mean_ref(flat, beta)
+    return med.reshape(x.shape[1:]), tm.reshape(x.shape[1:])
 
 
 median = functools.partial(robust_aggregate, method="median")

@@ -1,0 +1,298 @@
+"""Selection-network order-statistic engine (the robust-agg hot path).
+
+Every training step aggregates each gradient coordinate by an order
+statistic over the m worker rows (paper Definitions 1-2).  A full sort
+of the m rows is overkill: the median needs only the middle order
+statistic(s) and the β-trimmed mean only the band [b, m−b).  This module
+generates a **compare-exchange DAG** for static m and then removes every
+compare-exchange whose outputs cannot influence a requested rank
+(**dead-wire elimination**), emitting a minimal static min/max program.
+
+Construction
+------------
+Base networks (lists of ``(i, j)`` wire pairs, ``i < j``, applied in
+order; each comparator puts ``min`` on wire ``i`` and ``max`` on wire
+``j``):
+
+- :func:`batcher_network` — Batcher's odd-even mergesort,
+  O(m·log²m) comparators.  Generated for the next power of two and
+  clipped to m wires: odd-even mergesort is a *standard* network (every
+  comparator routes the min to the lower wire), so virtual wires ≥ m
+  behave as +∞ sentinels and every comparator touching them is the
+  identity — clipping is exact.
+- :func:`transposition_network` — the odd-even transposition network the
+  original kernel unrolled: m passes of neighbour exchanges, O(m²)
+  comparators.  Kept as the "full network" baseline the pruned programs
+  are measured against (benchmarks/agg_microbench.py).
+
+Pruning (dead-wire elimination)
+-------------------------------
+Walk the comparator list backwards, tracking the set of *live* wires
+(initially the requested ranks).  A comparator whose output wires are
+both dead cannot affect any requested rank — drop it.  A comparator with
+a live output needs **both** of its inputs (min and max each read both
+wires), so keep it and mark both input wires live.  The kept program
+computes bit-identical values on the requested wires as the full sort
+(same dataflow), so exactness is inherited from the base network — the
+property tests in tests/test_selection_network.py check every
+m ∈ 2..64 against ``np.sort``.
+
+Typical sizes (comparators): m=32 full transposition 496, full Batcher
+191, pruned median 157, pruned β=0.1 trim band 189 — and the program is
+pure ``min``/``max`` on whole rows, so the jnp executor vectorises over
+the coordinate axis exactly like the Pallas kernel's VPU lanes.
+
+Executors
+---------
+:func:`apply_network` runs a program on a list of row vectors with any
+min/max pair (``jnp`` inside jit / Pallas kernel bodies, ``np`` in
+tests).  :func:`median_select`, :func:`trimmed_mean_select` and the
+one-pass :func:`median_and_trimmed_select` are the jnp entry points used
+by core.aggregators for the stacked (m, d) path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Comparator = Tuple[int, int]
+
+# Largest worker count the unrolled network pays for: beyond it the
+# program size (O(m·log²m) traced min/max ops) stops beating jnp.sort,
+# and m is no longer "small and static" — the federated regime uses the
+# histogram sketch instead. Single source of truth for the dispatchers
+# in kernels/ops.py and core/aggregators.py.
+NETWORK_MAX_M = 64
+
+
+# --------------------------------------------------------------------------
+# base networks
+# --------------------------------------------------------------------------
+
+
+def _next_pow2(m: int) -> int:
+    p = 1
+    while p < m:
+        p *= 2
+    return p
+
+
+def _oddeven_merge(lo: int, hi: int, r: int, out: List[Comparator]) -> None:
+    step = r * 2
+    if step < hi - lo:
+        _oddeven_merge(lo, hi, step, out)
+        _oddeven_merge(lo + r, hi, step, out)
+        out.extend((i, i + r) for i in range(lo + r, hi - r, step))
+    else:
+        out.append((lo, lo + r))
+
+
+def _oddeven_sort(lo: int, hi: int, out: List[Comparator]) -> None:
+    if hi - lo >= 1:
+        mid = lo + (hi - lo) // 2
+        _oddeven_sort(lo, mid, out)
+        _oddeven_sort(mid + 1, hi, out)
+        _oddeven_merge(lo, hi, 1, out)
+
+
+@functools.lru_cache(maxsize=None)
+def batcher_network(m: int) -> Tuple[Comparator, ...]:
+    """Batcher odd-even mergesort network for any m ≥ 1 (standard form:
+    min always to the lower wire), clipped from the next power of two."""
+    if m <= 1:
+        return ()
+    p = _next_pow2(m)
+    full: List[Comparator] = []
+    _oddeven_sort(0, p - 1, full)
+    return tuple((i, j) for i, j in full if j < m)
+
+
+@functools.lru_cache(maxsize=None)
+def transposition_network(m: int) -> Tuple[Comparator, ...]:
+    """Odd-even transposition sort: m passes of neighbour compare-exchanges
+    (the O(m²) network the pre-selection kernel unrolled)."""
+    out: List[Comparator] = []
+    for p in range(m):
+        out.extend((i, i + 1) for i in range(p % 2, m - 1, 2))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# dead-wire elimination
+# --------------------------------------------------------------------------
+
+
+def prune_network(
+    comparators: Sequence[Comparator], m: int, ranks: Sequence[int]
+) -> Tuple[Comparator, ...]:
+    """Keep only comparators whose outputs (transitively) reach a requested
+    rank wire.  Backward liveness pass; see module docstring for why the
+    kept program is exact."""
+    live = bytearray(m)
+    for r in ranks:
+        if not 0 <= r < m:
+            raise ValueError(f"rank {r} out of range for m={m}")
+        live[r] = 1
+    kept: List[Comparator] = []
+    for i, j in reversed(comparators):
+        if live[i] or live[j]:
+            kept.append((i, j))
+            live[i] = live[j] = 1
+    kept.reverse()
+    return tuple(kept)
+
+
+# --------------------------------------------------------------------------
+# programs
+# --------------------------------------------------------------------------
+
+
+def median_ranks(m: int) -> Tuple[int, ...]:
+    """Rank set of Definition 1: the middle wire (odd m) or the two middle
+    wires whose f32 midpoint is the median (even m)."""
+    if m % 2 == 1:
+        return (m // 2,)
+    return (m // 2 - 1, m // 2)
+
+
+def band_ranks(m: int, trim: int) -> Tuple[int, ...]:
+    """Rank set of Definition 2's kept band [trim, m − trim)."""
+    if not (0 <= trim and 2 * trim < m):
+        raise ValueError(f"invalid trim {trim} for m={m}")
+    return tuple(range(trim, m - trim))
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionProgram:
+    """A pruned static min/max program computing ``ranks`` of m rows."""
+
+    m: int
+    ranks: Tuple[int, ...]
+    comparators: Tuple[Comparator, ...]
+    full_size: int  # comparator count of the unpruned base network
+
+    @property
+    def size(self) -> int:
+        return len(self.comparators)
+
+
+@functools.lru_cache(maxsize=None)
+def selection_program(
+    m: int, ranks: Tuple[int, ...], base: str = "batcher"
+) -> SelectionProgram:
+    """Build (and cache) the pruned program for a rank set.
+
+    ``base``: ``batcher`` (default — fewest comparators) or
+    ``transposition`` (the legacy full network, for benchmarking).
+    """
+    if base == "batcher":
+        net = batcher_network(m)
+    elif base == "transposition":
+        net = transposition_network(m)
+    else:
+        raise ValueError(f"unknown base network {base!r}")
+    ranks = tuple(sorted(set(ranks)))
+    return SelectionProgram(m, ranks, prune_network(net, m, ranks), len(net))
+
+
+def median_program(m: int, base: str = "batcher") -> SelectionProgram:
+    return selection_program(m, median_ranks(m), base)
+
+
+def trimmed_program(m: int, trim: int, base: str = "batcher") -> SelectionProgram:
+    return selection_program(m, band_ranks(m, trim), base)
+
+
+def fused_program(m: int, trim: int, base: str = "batcher") -> SelectionProgram:
+    """One program whose live wires cover the trim band AND the median
+    ranks — median and trimmed mean from a single pass over the rows."""
+    return selection_program(
+        m, tuple(sorted(set(band_ranks(m, trim)) | set(median_ranks(m)))), base)
+
+
+# --------------------------------------------------------------------------
+# executors
+# --------------------------------------------------------------------------
+
+
+def apply_network(
+    rows: Sequence,
+    comparators: Sequence[Comparator],
+    minimum: Callable = jnp.minimum,
+    maximum: Callable = jnp.maximum,
+) -> list:
+    """Run a compare-exchange program on a list of row values.
+
+    Rows may be jnp arrays (inside jit / Pallas kernel bodies), numpy
+    arrays (tests) or scalars; only ``minimum``/``maximum`` are called.
+    """
+    rows = list(rows)
+    for i, j in comparators:
+        a, b = rows[i], rows[j]
+        rows[i], rows[j] = minimum(a, b), maximum(a, b)
+    return rows
+
+
+def _unstack(x) -> list:
+    return [x[i] for i in range(x.shape[0])]
+
+
+def median_from_rows(rows: list, m: int, dtype) -> jnp.ndarray:
+    if m % 2 == 1:
+        return rows[m // 2]
+    lo = rows[m // 2 - 1].astype(jnp.float32)
+    hi = rows[m // 2].astype(jnp.float32)
+    # f32 midpoint, cast back — matches ref.median_ref / coordinate_median
+    return ((lo + hi) * 0.5).astype(dtype)
+
+
+def band_mean_from_rows(rows: list, m: int, trim: int, dtype) -> jnp.ndarray:
+    acc = rows[trim].astype(jnp.float32)
+    for i in range(trim + 1, m - trim):
+        acc = acc + rows[i].astype(jnp.float32)
+    return (acc / (m - 2 * trim)).astype(dtype)
+
+
+def median_select(x: jnp.ndarray, base: str = "batcher") -> jnp.ndarray:
+    """Coordinate-wise median of ``x`` (m, ...) via the pruned network."""
+    m = x.shape[0]
+    if m == 1:
+        return x[0]
+    prog = median_program(m, base)
+    rows = apply_network(_unstack(x), prog.comparators)
+    return median_from_rows(rows, m, x.dtype)
+
+
+def trimmed_mean_select(x: jnp.ndarray, trim: int, base: str = "batcher") -> jnp.ndarray:
+    """Coordinate-wise trimmed mean of ``x`` (m, ...) via the pruned
+    band-selection network (trim = floor(beta·m) rows off each end)."""
+    m = x.shape[0]
+    if trim == 0 and m == 1:
+        return x[0]
+    prog = trimmed_program(m, trim, base)
+    rows = apply_network(_unstack(x), prog.comparators)
+    return band_mean_from_rows(rows, m, trim, x.dtype)
+
+
+def median_and_trimmed_select(
+    x: jnp.ndarray, trim: int, base: str = "batcher"
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Median AND trimmed mean from one pass over the rows (fused rank
+    set) — the two estimators the benchmark matrix evaluates side by
+    side share all of their comparators."""
+    m = x.shape[0]
+    prog = fused_program(m, trim, base)
+    rows = apply_network(_unstack(x), prog.comparators)
+    return (median_from_rows(rows, m, x.dtype),
+            band_mean_from_rows(rows, m, trim, x.dtype))
+
+
+def rank_select(x: jnp.ndarray, rank: int, base: str = "batcher") -> jnp.ndarray:
+    """Single order statistic (0-indexed) — nearest-rank quantiles."""
+    m = x.shape[0]
+    prog = selection_program(m, (rank,), base)
+    rows = apply_network(_unstack(x), prog.comparators)
+    return rows[rank]

@@ -32,6 +32,20 @@ from repro.core import distributed, aggregators
 from repro.core.attacks import AttackConfig
 """
 
+# Version-compat shard_map wrapper: the collective-batching tests assert
+# structural properties (collective counts in the jaxpr) that hold on any
+# jax, so they use whichever shard_map API the environment provides
+# instead of pinning the newer jax.shard_map like the tests above.
+SMAP = PRELUDE + """
+def smap(f, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+"""
+
 
 def test_gather_agg_matches_oracle():
     run_sub(PRELUDE + """
@@ -329,3 +343,135 @@ np.testing.assert_allclose(np.asarray(outs["gather"][0], np.float32),
 assert abs(outs["gather"][1] - outs["bucketed"][1]) < 1e-4
 print("OK")
 """, devices=8)
+
+
+def test_bucketed_leaf_coalescing_collective_count():
+    """granularity='leaf' coalesces same-size-bin leaves into super-buckets:
+    a pytree of 8 leaves in 2 size bins must launch 2 all_to_all + 2
+    all_gather pairs (O(#size-bins)), not one pair per leaf — asserted by
+    counting collective eqns in the traced jaxpr."""
+    run_sub(SMAP + """
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(7)
+# 6 leaves of size 40 (one log2 bin) + 2 leaves of size 300 (another bin)
+shapes = [(40,)] * 6 + [(300,), (30, 10)]
+gs = [jnp.asarray(rng.standard_normal((8,) + s), jnp.float32) for s in shapes]
+
+def body(*args):
+    tree = {f"l{i}": a[0] for i, a in enumerate(args)}
+    return distributed.robust_bucketed_agg(tree, ("data",), "median")
+
+f = smap(body, mesh, tuple(P("data") for _ in gs), P())
+jaxpr = str(jax.make_jaxpr(f)(*gs))
+n_a2a = jaxpr.count("all_to_all[")
+n_ag = jaxpr.count("all_gather[")
+assert n_a2a == 2, f"expected 2 size-bin all_to_alls, got {n_a2a}"
+assert n_ag == 2, f"expected 2 size-bin all_gathers, got {n_ag}"
+
+# same story in the compiled HLO, via the launch/hlo_analysis parser
+# (XLA's collective combiner may merge further, never split)
+from repro.launch import hlo_analysis
+txt = jax.jit(f).lower(*gs).compile().as_text()
+comps = hlo_analysis.parse_module(txt)
+seen = set()
+n_hlo = 0
+for name, comp in comps.items():
+    if name == "__entry__" or name in seen:
+        continue
+    seen.add(name)
+    n_hlo += sum(1 for op in comp.ops if op.opcode.startswith("all-to-all"))
+assert 1 <= n_hlo <= 2, f"compiled all-to-all count {n_hlo} not O(#size-bins)"
+
+# and the coalesced result is still the exact global median per leaf
+out = f(*gs)
+for i, g in enumerate(gs):
+    np.testing.assert_allclose(np.asarray(out[f"l{i}"]),
+                               np.median(np.asarray(g), axis=0),
+                               rtol=1e-5, atol=1e-6)
+print("OK")
+""")
+
+
+def test_bucketed_leaf_coalescing_respects_size_cap():
+    """Leaves whose combined size exceeds the super-bucket cap split into
+    multiple groups — the coalescer must not reintroduce the unbounded
+    flat concat."""
+    run_sub(SMAP + """
+from repro.core.distributed import _coalesce_groups
+leaves = [jnp.zeros((1000,)) for _ in range(5)]
+groups = _coalesce_groups(leaves, max_elems=2100)
+assert [len(g) for g in groups] == [2, 2, 1], groups
+assert sorted(i for g in groups for i in g) == list(range(5))
+# zero groups never share leaves across dtype bins
+mixed = [jnp.zeros((8,), jnp.float32), jnp.zeros((8,), jnp.bfloat16)]
+assert len(_coalesce_groups(mixed)) == 2
+print("OK")
+""")
+
+
+def test_chunked_agg_single_psum_per_chunk_and_scan():
+    """The chunked strategy must issue ONE fused psum per chunk (counts and
+    sums concatenated) from inside a lax.scan — trace size O(1) in the
+    chunk count."""
+    run_sub(SMAP + """
+g = jnp.asarray(np.random.default_rng(0).standard_normal((8, 100)), jnp.float32)
+mesh = jax.make_mesh((8,), ("data",))
+
+for method, psums in (("median", 1), ("trimmed_mean", 1)):
+    def body(gg, method=method):
+        return distributed.robust_chunked_agg({"w": gg[0]}, ("data",), method,
+                                              beta=0.25, nbins=256,
+                                              coord_chunk=16)["w"]
+    f = smap(body, mesh, P("data"), P())
+    jaxpr = str(jax.make_jaxpr(f)(g))
+    assert "scan" in jaxpr, "chunk loop must be a lax.scan"
+    n_psum = jaxpr.count("psum")
+    assert n_psum == psums, (method, n_psum, psums)
+
+# correctness: sketch median within one bin width of the exact median
+f = smap(lambda gg: distributed.robust_chunked_agg(
+    {"w": gg[0]}, ("data",), "median", nbins=512, coord_chunk=16)["w"],
+    mesh, P("data"), P())
+got = np.asarray(f(g))
+want = np.median(np.asarray(g), axis=0)
+width = (np.asarray(g).max(0) - np.asarray(g).min(0)) / 512
+assert (np.abs(got - want) <= width + 1e-6).all()
+
+# trimmed mean too (padding path: 100 coords, chunk 16 -> pad to 112)
+ft = smap(lambda gg: distributed.robust_chunked_agg(
+    {"w": gg[0]}, ("data",), "trimmed_mean", beta=0.25, nbins=512,
+    coord_chunk=16)["w"], mesh, P("data"), P())
+got = np.asarray(ft(g))
+want = np.sort(np.asarray(g), axis=0)[2:6].mean(0)
+assert (np.abs(got - want) <= width + 1e-6).all()
+print("OK")
+""")
+
+
+def test_bucketed_coalesced_attack_parity_with_gather():
+    """Gradient-space attacks are row-broadcast formulas, so coalescing
+    leaves into super-buckets must not change the attacked estimator:
+    bucketed(leaf) == gather for a multi-leaf tree under sign_flip."""
+    run_sub(SMAP + """
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(3)
+shapes = [(11,), (11,), (4, 3), (64,)]
+gs = [jnp.asarray(rng.standard_normal((8,) + s), jnp.float32) for s in shapes]
+atk = AttackConfig("sign_flip", alpha=0.25, scale=5.0)
+
+def mk(strategy):
+    def body(*args):
+        tree = {f"l{i}": a[0] for i, a in enumerate(args)}
+        if strategy == "gather":
+            return distributed.robust_gather_agg(tree, ("data",), "median",
+                                                 attack=atk)
+        return distributed.robust_bucketed_agg(tree, ("data",), "median",
+                                               attack=atk)
+    return smap(body, mesh, tuple(P("data") for _ in gs), P())
+
+oa, og = mk("bucketed")(*gs), mk("gather")(*gs)
+for k in oa:
+    np.testing.assert_allclose(np.asarray(oa[k]), np.asarray(og[k]),
+                               rtol=1e-5, atol=1e-6)
+print("OK")
+""")

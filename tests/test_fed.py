@@ -340,3 +340,39 @@ def test_distributed_chunked_strategy():
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, timeout=600)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+
+
+class TestStreamingMulti:
+    """streaming_aggregate_multi: several estimators from ONE shared
+    two-pass sketch (the streaming analogue of the fused selection
+    kernel)."""
+
+    def test_matches_single_method_calls(self):
+        from repro.fed import streaming
+
+        cfg = streaming.SketchConfig(nbins=256, backend="xla")
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((120, 19)), jnp.float32)
+        bounds = [(s, min(s + 32, 120)) for s in range(0, 120, 32)]
+        chunk_fn = lambda j: x[bounds[j][0]:bounds[j][1]]  # noqa: E731
+        multi = streaming.streaming_aggregate_multi(
+            chunk_fn, len(bounds), 19, ("mean", "median", "trimmed_mean"), 0.1, cfg)
+        for method in ("mean", "median", "trimmed_mean"):
+            single = streaming.streaming_aggregate(
+                chunk_fn, len(bounds), 19, method, 0.1, cfg)
+            np.testing.assert_allclose(np.asarray(multi[method]),
+                                       np.asarray(single), rtol=1e-6, atol=1e-6)
+
+    def test_accuracy_and_unknown_method(self):
+        from repro.fed import streaming
+
+        cfg = streaming.SketchConfig(nbins=512, backend="xla")
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((200, 23)), jnp.float32)
+        out = streaming.aggregate_array_chunked(x, "median", chunk_rows=64, cfg=cfg)
+        xa = np.asarray(x)
+        width = (xa.max(0) - xa.min(0)) / 512
+        assert (np.abs(np.asarray(out) - np.median(xa, 0)) <= width + 1e-6).all()
+        with pytest.raises(ValueError):
+            streaming.streaming_aggregate_multi(
+                lambda j: x, 1, 23, ("median", "geometric_median"), cfg=cfg)

@@ -1,0 +1,228 @@
+"""Selection-network engine validation (kernels/selection_network.py).
+
+The pruned programs must be *provably exact*: every m ∈ 2..64, odd and
+even, and every legal trim count b ∈ {0..⌊(m−1)/2⌋} is checked against
+the ``np.sort`` / ``jnp.sort`` references. Program structure is executed
+with numpy min/max in the sweeps (the program is backend-agnostic — only
+``minimum``/``maximum`` are called), with jnp/jit and Pallas spot checks
+for the production executors. ``hypothesis`` is optional, matching the
+tests/test_aggregators.py pattern.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip, unit tests still run
+    def given(*_args, **_kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: _StrategyStub()
+
+        def __call__(self, *a, **k):
+            return _StrategyStub()
+
+    st = _StrategyStub()
+
+from repro.kernels import ref, selection_network as SN
+from repro.kernels.robust_agg import fused_median_trimmed_pallas
+
+
+def _np_apply(x: np.ndarray, comparators) -> list:
+    return SN.apply_network([x[i] for i in range(x.shape[0])], comparators,
+                            np.minimum, np.maximum)
+
+
+def _np_median_from(rows, m):
+    if m % 2 == 1:
+        return rows[m // 2]
+    return 0.5 * (rows[m // 2 - 1] + rows[m // 2])
+
+
+# ------------------------------------------------------------ construction
+
+
+@pytest.mark.parametrize("m", list(range(2, 65)))
+def test_batcher_network_sorts(m):
+    rng = np.random.default_rng(m)
+    x = rng.standard_normal((m, 11)).astype(np.float32)
+    rows = _np_apply(x, SN.batcher_network(m))
+    np.testing.assert_array_equal(np.stack(rows), np.sort(x, axis=0))
+
+
+def test_transposition_network_sorts_and_is_quadratic():
+    for m in (2, 7, 16, 33):
+        rng = np.random.default_rng(m)
+        x = rng.standard_normal((m, 5)).astype(np.float32)
+        rows = _np_apply(x, SN.transposition_network(m))
+        np.testing.assert_array_equal(np.stack(rows), np.sort(x, axis=0))
+    assert len(SN.transposition_network(32)) == 496  # m(m-1)/2 pairs
+
+
+# ----------------------------------------------------------- pruned median
+
+
+@pytest.mark.parametrize("m", list(range(2, 65)))
+def test_pruned_median_exact(m):
+    """Pruned program ≡ sort-based median for every m (odd and even)."""
+    rng = np.random.default_rng(100 + m)
+    x = rng.standard_normal((m, 23)).astype(np.float32)
+    prog = SN.median_program(m)
+    rows = _np_apply(x, prog.comparators)
+    np.testing.assert_allclose(_np_median_from(rows, m), np.median(x, axis=0),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m", list(range(2, 65)))
+def test_pruned_trimmed_band_exact_all_b(m):
+    """Every legal trim count b ∈ {0..⌊(m−1)/2⌋}: the band wires of the
+    pruned program hold exactly the order statistics b..m−b−1."""
+    rng = np.random.default_rng(200 + m)
+    x = rng.standard_normal((m, 13)).astype(np.float32)
+    s = np.sort(x, axis=0)
+    for b in range(0, (m - 1) // 2 + 1):
+        prog = SN.trimmed_program(m, b)
+        rows = _np_apply(x, prog.comparators)
+        np.testing.assert_array_equal(
+            np.stack(rows[b : m - b]), s[b : m - b], err_msg=f"m={m} b={b}")
+
+
+@pytest.mark.parametrize("m", [8, 9, 16, 31, 32, 33, 64])
+def test_pruning_strictly_reduces_ops(m):
+    """Dead-wire elimination must beat the full O(m²) network for m ≥ 8 —
+    the compare-exchange-count acceptance bar — and also strictly prune
+    its own base network (median needs less than a full sort)."""
+    full_quadratic = len(SN.transposition_network(m))
+    full_batcher = len(SN.batcher_network(m))
+    med = SN.median_program(m)
+    assert med.size < full_quadratic
+    assert med.size < full_batcher
+    assert med.full_size == full_batcher
+    tm = SN.trimmed_program(m, max(1, m // 10))
+    assert tm.size < full_quadratic
+    fused = SN.fused_program(m, max(1, m // 10))
+    assert med.size <= fused.size <= full_batcher
+
+
+def test_prune_validates_ranks():
+    with pytest.raises(ValueError):
+        SN.prune_network(SN.batcher_network(8), 8, (8,))
+    with pytest.raises(ValueError):
+        SN.band_ranks(8, 4)  # 2*4 >= 8
+
+
+# ------------------------------------------------------- hypothesis sweep
+
+
+def _floats():
+    return st.floats(-1e6, 1e6, allow_nan=False, allow_subnormal=False, width=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.lists(_floats(), min_size=64, max_size=64),
+       st.integers(0, 31))
+def test_property_pruned_matches_sort(m, vals, b_seed):
+    x = np.asarray(vals[:m], np.float32)[:, None]
+    b = b_seed % ((m - 1) // 2 + 1)
+    prog = SN.selection_program(m, tuple(range(b, m - b)))
+    rows = _np_apply(x, prog.comparators)
+    s = np.sort(x, axis=0)
+    np.testing.assert_array_equal(np.stack(rows[b : m - b]), s[b : m - b])
+
+
+# ------------------------------------------------------------- jnp executors
+
+
+@pytest.mark.parametrize("m", [2, 3, 8, 17, 32, 64])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_median_select_matches_ref(m, dtype):
+    rng = np.random.default_rng(m)
+    x = jnp.asarray(rng.standard_normal((m, 257)), dtype=dtype)
+    got = SN.median_select(x)
+    want = ref.median_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,trim", [(5, 1), (16, 3), (32, 8), (64, 6)])
+def test_trimmed_mean_select_matches_ref(m, trim):
+    rng = np.random.default_rng(m)
+    x = jnp.asarray(rng.standard_normal((m, 301)), jnp.float32)
+    got = SN.trimmed_mean_select(x, trim)
+    want = ref.trimmed_mean_ref(x, trim / m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,trim", [(9, 2), (16, 3), (32, 8)])
+def test_fused_select_and_pallas_one_pass(m, trim):
+    """The fused program yields BOTH estimators, jnp and Pallas paths."""
+    rng = np.random.default_rng(m * 7)
+    x = jnp.asarray(rng.standard_normal((m, 300)), jnp.float32)
+    med, tm = SN.median_and_trimmed_select(x, trim)
+    np.testing.assert_allclose(np.asarray(med), np.median(np.asarray(x), axis=0),
+                               rtol=1e-6, atol=1e-6)
+    want_tm = np.sort(np.asarray(x), axis=0)[trim : m - trim].mean(0)
+    np.testing.assert_allclose(np.asarray(tm), want_tm, rtol=1e-5, atol=1e-5)
+    medp, tmp = fused_median_trimmed_pallas(x, trim, block=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(medp), np.asarray(med), rtol=1e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tmp), np.asarray(tm), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_rank_select_quantiles():
+    x = jnp.asarray(np.arange(11, dtype=np.float32)[::-1].copy()[:, None])
+    assert float(SN.rank_select(x, 0)[0]) == 0.0
+    assert float(SN.rank_select(x, 5)[0]) == 5.0
+    assert float(SN.rank_select(x, 10)[0]) == 10.0
+
+
+def test_adversarial_rows_bounded():
+    """Pruned-network median keeps Byzantine values out of the output."""
+    rng = np.random.default_rng(2)
+    honest = rng.standard_normal((9, 130)).astype(np.float32)
+    adv = np.full((4, 130), 1e30, np.float32)
+    x = jnp.asarray(np.concatenate([honest, adv]))
+    got = np.asarray(SN.median_select(x))
+    assert (got <= honest.max(0)).all() and (got >= honest.min(0)).all()
+
+
+def test_aggregators_dispatch_through_network():
+    """core.aggregators routes small static m through the pruned network
+    (and the large-m top_k partial-selection path stays exact)."""
+    from repro.core import aggregators as agg
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((32, 100)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(agg.coordinate_median(x)),
+                               np.median(np.asarray(x), axis=0), rtol=1e-6)
+    want = np.sort(np.asarray(x), axis=0)[3:29].mean(0)
+    np.testing.assert_allclose(np.asarray(agg.coordinate_trimmed_mean(x, 0.1)),
+                               want, rtol=1e-5, atol=1e-5)
+    big = jnp.asarray(rng.standard_normal((128, 40)), jnp.float32)
+    want = np.sort(np.asarray(big), axis=0)[12:116].mean(0)
+    np.testing.assert_allclose(np.asarray(agg.coordinate_trimmed_mean(big, 0.1)),
+                               want, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_auto_backend_respects_network_limit():
+    """fused_median_trimmed's auto dispatch must fall back to the sort
+    path above NETWORK_MAX_M instead of unrolling a huge program."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((ops.NETWORK_MAX_M * 2, 19)), jnp.float32)
+    med, tm = ops.fused_median_trimmed(x, beta=0.1)
+    xa = np.asarray(x)
+    np.testing.assert_allclose(np.asarray(med), np.median(xa, axis=0), rtol=1e-6)
+    m = xa.shape[0]
+    want = np.sort(xa, axis=0)[m // 10 : m - m // 10].mean(0)
+    np.testing.assert_allclose(np.asarray(tm), want, rtol=1e-5, atol=1e-5)

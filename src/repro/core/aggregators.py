@@ -38,8 +38,16 @@ def _network_max_m() -> int:
 
 
 def _trimmed_mean_topk(x: jax.Array, b: int) -> jax.Array:
-    """β-trimmed mean via partial selection: kept-band sum = total − (sum
-    of the b largest) − (sum of the b smallest), each from ``lax.top_k``.
+    """β-trimmed mean via partial selection: ``lax.top_k`` finds the b-th
+    smallest/largest values, which bound the kept band; the band is then
+    summed directly through a keep-mask (with tie corrections at the two
+    thresholds so exactly m − 2b entries contribute).
+
+    Summing only the kept band matters: the tempting identity
+    ``total − top_b − bottom_b`` cancels catastrophically when the
+    trimmed rows are Byzantine-scale (±1e30 outliers annihilate the
+    honest contribution to ``total`` in f32 — the exact threat model
+    trimmed mean exists for).
 
     O(m·b)-ish work per coordinate instead of the full O(m·log m) sort —
     the winning path for m beyond the network limit when the trim band's
@@ -48,10 +56,23 @@ def _trimmed_mean_topk(x: jax.Array, b: int) -> jax.Array:
     """
     m = x.shape[0]
     xf = jnp.moveaxis(x.astype(jnp.float32), 0, -1)  # (..., m)
-    total = jnp.sum(xf, axis=-1)
-    top = jnp.sum(jax.lax.top_k(xf, b)[0], axis=-1)
-    bot = -jnp.sum(jax.lax.top_k(-xf, b)[0], axis=-1)
-    return ((total - top - bot) / (m - 2 * b)).astype(x.dtype)
+    hi_thr = jax.lax.top_k(xf, b)[0][..., -1]    # b-th largest
+    lo_thr = -jax.lax.top_k(-xf, b)[0][..., -1]  # b-th smallest
+    lo = lo_thr[..., None]
+    hi = hi_thr[..., None]
+    mid_sum = jnp.sum(jnp.where((xf > lo) & (xf < hi), xf, 0.0), axis=-1)
+    # Ties at a threshold: trimming removes b entries per side, so of the
+    # entries equal to lo_thr, (b − #strictly-below) are trimmed and the
+    # rest kept; symmetrically at hi_thr.
+    kept_lo = jnp.sum(xf == lo, axis=-1) - (b - jnp.sum(xf < lo, axis=-1))
+    kept_hi = jnp.sum(xf == hi, axis=-1) - (b - jnp.sum(xf > hi, axis=-1))
+    band_sum = (mid_sum
+                + jnp.where(kept_lo > 0, lo_thr * kept_lo, 0.0)
+                + jnp.where(kept_hi > 0, hi_thr * kept_hi, 0.0))
+    # lo_thr == hi_thr ⇒ the whole kept band is that one value (the strict
+    # mask is empty and both tie terms would double-count it).
+    band_sum = jnp.where(lo_thr == hi_thr, (m - 2 * b) * lo_thr, band_sum)
+    return (band_sum / (m - 2 * b)).astype(x.dtype)
 
 
 def coordinate_median(x: jax.Array) -> jax.Array:

@@ -28,6 +28,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _check_network_m(m: int) -> None:
+    """Explicit backend='network' must respect the same limit as auto
+    dispatch: above NETWORK_MAX_M the unrolled comparator program is
+    O(m log² m) static ops and compile time becomes pathological."""
+    if m > NETWORK_MAX_M:
+        raise ValueError(
+            f"backend='network' supports m <= {NETWORK_MAX_M}, got m={m}; "
+            "use backend='xla' (or 'auto') for larger worker counts")
+
+
 def robust_aggregate(
     x: jax.Array,
     method: str = "median",
@@ -41,6 +51,8 @@ def robust_aggregate(
     if backend == "auto":
         backend = "pallas" if _on_tpu() else (
             "network" if 2 <= m <= NETWORK_MAX_M else "xla")
+    elif backend == "network":
+        _check_network_m(m)
     interpret = not _on_tpu()
     if method == "median":
         if backend == "pallas":
@@ -84,6 +96,8 @@ def fused_median_trimmed(
     if backend == "auto":
         backend = "pallas" if _on_tpu() else (
             "network" if 2 <= m <= NETWORK_MAX_M else "xla")
+    elif backend == "network":
+        _check_network_m(m)
     if backend == "pallas":
         med, tm = robust_agg.fused_median_trimmed_pallas(
             flat, trim, block=block, interpret=not _on_tpu())

@@ -213,6 +213,63 @@ def test_aggregators_dispatch_through_network():
                                want, rtol=1e-4, atol=1e-5)
 
 
+def test_trimmed_mean_topk_adversarial_rows_bounded():
+    """The m > NETWORK_MAX_M top_k trimmed-mean path must survive
+    Byzantine-scale outliers: summing the kept band directly, not
+    total − extremes (which cancels catastrophically in f32)."""
+    from repro.core import aggregators as agg
+
+    rng = np.random.default_rng(7)
+    m, b_rows = 128, 12
+    honest = rng.standard_normal((m - 2 * b_rows, 130)).astype(np.float32)
+    big = np.full((b_rows, 130), 1e30, np.float32)
+    x = np.concatenate([honest, big, -big])
+    rng.shuffle(x, axis=0)
+    beta = 12 / m  # trim count == Byzantine count per side
+    assert m > agg._network_max_m() and int(beta * m) <= m // 8  # top_k path
+    got = np.asarray(agg.coordinate_trimmed_mean(jnp.asarray(x), beta))
+    want = np.sort(x, axis=0)[12 : m - 12].mean(0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert (got <= honest.max(0)).all() and (got >= honest.min(0)).all()
+    # float32-max outliers: the old total − extremes identity gave inf − inf
+    x2 = np.concatenate([honest, np.full_like(big, 3e38), np.full_like(big, -3e38)])
+    got2 = np.asarray(agg.coordinate_trimmed_mean(jnp.asarray(x2), beta))
+    assert np.isfinite(got2).all()
+    np.testing.assert_allclose(got2, np.sort(x2, axis=0)[12 : m - 12].mean(0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_trimmed_mean_topk_handles_threshold_ties():
+    """Tie handling: duplicated values straddling the trim thresholds
+    must still keep exactly m − 2b entries per coordinate."""
+    from repro.core import aggregators as agg
+
+    m, b = 128, 10
+    col = np.concatenate([np.full(30, -2.0), np.full(40, 0.5),
+                          np.full(38, 1.0), np.full(20, 7.0)]).astype(np.float32)
+    rng = np.random.default_rng(11)
+    x = np.stack([rng.permutation(col) for _ in range(5)], axis=1)
+    got = np.asarray(agg._trimmed_mean_topk(jnp.asarray(x), b))
+    want = np.sort(x, axis=0)[b : m - b].mean(0)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # degenerate band: all kept entries equal (constant column)
+    xc = jnp.ones((m, 3), jnp.float32)
+    np.testing.assert_allclose(np.asarray(agg._trimmed_mean_topk(xc, b)),
+                               np.ones(3, np.float32), rtol=1e-6)
+
+
+def test_explicit_network_backend_rejects_large_m():
+    """backend='network' above NETWORK_MAX_M must error, not unroll an
+    O(m log² m) comparator program into the trace."""
+    from repro.kernels import ops
+
+    x = jnp.zeros((ops.NETWORK_MAX_M * 2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="network"):
+        ops.robust_aggregate(x, method="median", backend="network")
+    with pytest.raises(ValueError, match="network"):
+        ops.fused_median_trimmed(x, beta=0.1, backend="network")
+
+
 def test_fused_auto_backend_respects_network_limit():
     """fused_median_trimmed's auto dispatch must fall back to the sort
     path above NETWORK_MAX_M instead of unrolling a huge program."""

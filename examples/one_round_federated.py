@@ -8,7 +8,6 @@ coordinate-wise median. One communication round total.
 Run:  PYTHONPATH=src python examples/one_round_federated.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.core.attacks import AttackConfig
 from repro.core.one_round import OneRoundConfig, make_gd_local_solver, one_round

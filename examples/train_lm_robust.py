@@ -10,13 +10,11 @@ Run:  PYTHONPATH=src python examples/train_lm_robust.py [--steps 300]
 (sets its own XLA_FLAGS; ~100M params, CPU-friendly settings)
 """
 import os
-import sys
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -1,0 +1,58 @@
+"""Diff two BENCH_agg.json files and print per-case speedup deltas.
+
+Used by the CI bench job to compare the fresh run against the committed
+baseline in the job summary (markdown table).  Informational only — the
+hard gate stays benchmarks/run.py --gate-agg (0.7x floor vs the XLA-sort
+baseline); this diff makes drift visible per (op, m, d) case so a slow
+regression inside the gate margin still shows up in CI history.
+
+    python scripts/bench_diff.py --base OLD.json --new NEW.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _index(payload: dict) -> dict:
+    return {(r["op"], r["m"], r["d"]): r for r in payload.get("records", [])}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", required=True, help="committed baseline json")
+    ap.add_argument("--new", required=True, help="fresh run json")
+    args = ap.parse_args(argv)
+    with open(args.base) as f:
+        base = _index(json.load(f))
+    with open(args.new) as f:
+        new = _index(json.load(f))
+
+    print("### Agg micro-bench vs committed baseline")
+    print()
+    print("| op | m | d | base µs | new µs | µs Δ | base speedup | new speedup |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(new):
+        op, m, d = key
+        nr = new[key]
+        br = base.get(key)
+        if br is None:
+            print(f"| {op} | {m} | {d} | — | {nr['us']:.1f} | new case | — | "
+                  f"{nr['speedup'] if nr['speedup'] is not None else '—'} |")
+            continue
+        dus = nr["us"] - br["us"]
+        bs = br.get("speedup")
+        ns = nr.get("speedup")
+        fmt = lambda v: f"{v:.2f}x" if isinstance(v, (int, float)) else "—"
+        print(f"| {op} | {m} | {d} | {br['us']:.1f} | {nr['us']:.1f} | "
+              f"{dus:+.1f} | {fmt(bs)} | {fmt(ns)} |")
+    dropped = sorted(set(base) - set(new))
+    if dropped:
+        print()
+        print(f"dropped cases (in baseline, not in fresh run): {dropped}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

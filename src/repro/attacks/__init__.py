@@ -1,0 +1,37 @@
+"""repro.attacks — registry-based Byzantine attack engine.
+
+Replaces the static helpers that used to live in core/attacks.py (which
+remains as a thin ``AttackConfig`` compatibility shim).  Layout:
+
+- ``base``      access levels (data < local < stats < omniscient),
+                :class:`AttackContext`, :class:`Attack`;
+- ``registry``  name -> Attack registration and lookup;
+- ``library``   the registered attacks (ALIE, IPM, mimic, anti-trimmed-mean
+                max-damage, sign/label flips, noise/zero/stale, ...);
+- ``engine``    applying attacks on the gathered-rows and statistics-only
+                (psum/streaming) execution paths;
+- ``schedule``  adaptive per-round attack scheduling (greedy adversary);
+- ``matrix``    the vectorized (attack x aggregator x alpha x m) robustness
+                matrix and its CI gate (``python -m repro.attacks.matrix``).
+"""
+from repro.attacks.base import (  # noqa: F401
+    ACCESS_LEVELS,
+    DATA,
+    LOCAL,
+    OMNISCIENT,
+    STATS,
+    Attack,
+    AttackContext,
+)
+from repro.attacks.engine import (  # noqa: F401
+    apply_to_rows,
+    as_attack,
+    build_context,
+    byzantine_mask,
+    corrupt_labels,
+    honest_statistics,
+    num_byzantine,
+    payload_from_stats,
+)
+from repro.attacks.registry import alias, get_attack, register, registered  # noqa: F401
+from repro.attacks.schedule import GreedyScheduler  # noqa: F401

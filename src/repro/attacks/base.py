@@ -1,0 +1,112 @@
+"""Attack-engine core types: access levels, attack context, attack spec.
+
+The paper's threat model gives Byzantine machines *arbitrary* power —
+"possibly colluding and with full knowledge of the data and algorithm".
+Real attacks from the literature differ sharply in how much of that
+power they actually use, and an aggregator that survives a weak attack
+can still fall to a stronger one (Chen et al. 2017; Baruch et al. 2019;
+Xie et al. 2020).  The engine therefore makes the *gradient-access
+level* a first-class, declared property of every attack:
+
+``data``        corrupts the Byzantine worker's local samples before the
+                gradient is ever computed (the paper's label-flip
+                experiments).  No gradient-space payload.
+``local``       sees only the Byzantine worker's own honest gradient
+                (plus public state: the previous broadcast aggregate).
+``stats``       colluding workers additionally observe the coordinate-wise
+                mean and variance of the *honest* gradients — the oracle
+                ALIE-style attacks assume.
+``omniscient``  sees every individual honest gradient row; the strongest
+                (and most expensive) adversary, able to clone rows or
+                place mass exactly at the honest extremes.
+
+The context handed to an attack's payload exposes ONLY the fields its
+declared access level grants (lower levels see ``None``), so the
+contract is enforced structurally rather than by convention — and is
+testable (tests/test_attacks.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+# Access levels, ordered by increasing knowledge of the honest gradients.
+DATA = "data"
+LOCAL = "local"
+STATS = "stats"
+OMNISCIENT = "omniscient"
+ACCESS_LEVELS = (DATA, LOCAL, STATS, OMNISCIENT)
+
+
+def access_rank(access: str) -> int:
+    if access not in ACCESS_LEVELS:
+        raise ValueError(f"unknown access level {access!r}; want one of {ACCESS_LEVELS}")
+    return ACCESS_LEVELS.index(access)
+
+
+@dataclasses.dataclass
+class AttackContext:
+    """Everything a gradient-space attack may observe, pre-filtered by access.
+
+    Shapes: ``rows``/``own`` carry the leading worker axis ``(m, ...)`` on
+    the gathered-rows path; on the psum/streaming paths ``own`` is this
+    worker's local row ``(...)`` and ``rows`` is ``None`` (omniscient
+    attacks cannot run there).  ``honest_mean``/``honest_var`` and
+    ``prev_agg`` are row-broadcastable ``(...)``.
+    """
+
+    m: int  # static worker count
+    alpha: jax.Array  # Byzantine fraction (may be traced)
+    strength: jax.Array  # attack-strength knob (may be traced)
+    # public state — visible at EVERY access level (the aggregate is
+    # broadcast back to all workers each round):
+    prev_agg: Optional[jax.Array] = None  # previous round's aggregate
+    round: Optional[jax.Array] = None  # round/iteration index
+    key: Optional[jax.Array] = None  # PRNG key (randomized attacks)
+    # local and above:
+    own: Optional[jax.Array] = None  # the Byzantine worker's own gradient(s)
+    # stats and above:
+    honest_mean: Optional[jax.Array] = None
+    honest_var: Optional[jax.Array] = None
+    # omniscient only:
+    rows: Optional[jax.Array] = None  # all per-worker rows (m, ...)
+    mask: Optional[jax.Array] = None  # (m,) bool, True = Byzantine
+
+
+PayloadFn = Callable[[AttackContext], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    """A registered attack: payload formula + declared capabilities.
+
+    ``payload(ctx)`` returns the Byzantine rows — either row-broadcastable
+    ``(...)`` (all colluders send the same vector) or per-row ``(m, ...)``.
+    ``strength`` is the default for the tunable knob (z-multiplier,
+    scale, ε — attack-specific; documented per attack).  ``adaptive``
+    attacks read ``ctx.prev_agg`` and change their payload across rounds;
+    ``randomized`` attacks read ``ctx.key``.  Data-space attacks have no
+    gradient payload and instead implement ``corrupt_labels``.
+    """
+
+    name: str
+    access: str
+    payload: Optional[PayloadFn] = None
+    strength: float = 1.0
+    adaptive: bool = False
+    randomized: bool = False
+    needs_variance: bool = False  # payload reads ctx.honest_var
+    reads_own: bool = False  # payload reads ctx.own's VALUES (not just shape)
+    summary: str = ""
+    # data-space attacks: (labels, key, num_classes) -> corrupted labels
+    corrupt_labels: Optional[Callable] = None
+
+    def __post_init__(self):
+        access_rank(self.access)  # validate
+        if self.access == DATA:
+            if self.corrupt_labels is None:
+                raise ValueError(f"data attack {self.name!r} needs corrupt_labels")
+        elif self.payload is None:
+            raise ValueError(f"gradient attack {self.name!r} needs a payload fn")

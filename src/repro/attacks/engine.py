@@ -1,0 +1,203 @@
+"""Applying registered attacks to gradients — the two execution paths.
+
+``apply_to_rows``      gathered-rows path: per-worker gradients stacked
+                       ``(m, ...)`` are visible (robust_gd, the gather /
+                       bucketed collective strategies, fed chunk loops).
+                       Supports every access level.
+
+``payload_from_stats`` statistics path: no rows are ever materialized
+                       (the psum/chunked strategy, streaming sketches);
+                       the caller reproduces the colluders' honest
+                       mean/variance oracle with collectives and feeds it
+                       here.  Supports data/local/stats attacks —
+                       omniscient attacks *need rows* and raise, which is
+                       itself part of the access-level contract.
+
+Both paths build the identical :class:`AttackContext` from the identical
+statistics, so an attack cannot drift between the single-host reference
+and the distributed implementation (the parity tests in test_fed /
+test_distributed pin this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.attacks.base import (
+    DATA,
+    LOCAL,
+    OMNISCIENT,
+    STATS,
+    Attack,
+    AttackContext,
+    access_rank,
+)
+from repro.attacks.registry import get_attack
+
+AttackLike = Union[str, Attack]
+
+
+def as_attack(attack: AttackLike) -> Attack:
+    return attack if isinstance(attack, Attack) else get_attack(attack)
+
+
+def num_byzantine(alpha, m: int):
+    """ceil(alpha*m), capped at m-1; 0 for alpha<=0.  Python ints for
+    python floats (static mask construction), jnp for traced alpha."""
+    if isinstance(alpha, (int, float)):
+        return min(m - 1, math.ceil(alpha * m)) if alpha > 0 else 0
+    q = jnp.minimum(m - 1, jnp.ceil(alpha * m))
+    return jnp.where(alpha > 0, q, 0).astype(jnp.int32)
+
+
+def byzantine_mask(alpha, m: int) -> jax.Array:
+    """(m,) bool mask, workers 0..q-1 Byzantine (the choice of *which*
+    workers is immaterial to permutation-invariant aggregators)."""
+    return jnp.arange(m) < num_byzantine(alpha, m)
+
+
+def build_context(
+    attack: Attack,
+    *,
+    m: int,
+    alpha,
+    strength=None,
+    mask: Optional[jax.Array] = None,
+    rows: Optional[jax.Array] = None,
+    own: Optional[jax.Array] = None,
+    honest_mean: Optional[jax.Array] = None,
+    honest_var: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+    prev_agg: Optional[jax.Array] = None,
+    rnd=None,
+) -> AttackContext:
+    """Assemble a context exposing ONLY what ``attack.access`` grants.
+
+    Callers hand over everything they have; the filter makes the declared
+    access level structurally binding (a stats attack physically cannot
+    read rows — the field is ``None`` in its context).
+    """
+    rank = access_rank(attack.access)
+    if strength is None:
+        strength = attack.strength
+    if key is None and attack.randomized:
+        key = jax.random.PRNGKey(0)
+    return AttackContext(
+        m=m,
+        alpha=alpha,
+        strength=strength,
+        prev_agg=prev_agg,
+        round=rnd,
+        key=key,
+        own=own if rank >= access_rank(LOCAL) else None,
+        honest_mean=honest_mean if rank >= access_rank(STATS) else None,
+        honest_var=honest_var if rank >= access_rank(STATS) else None,
+        rows=rows if rank >= access_rank(OMNISCIENT) else None,
+        mask=mask if rank >= access_rank(OMNISCIENT) else None,
+    )
+
+
+def honest_statistics(stacked: jax.Array, mask: jax.Array):
+    """Coordinate-wise mean and variance over the honest (unmasked) rows —
+    the exact legacy formulas (core/attacks.py), shared by both paths."""
+    m = stacked.shape[0]
+    bshape = (m,) + (1,) * (stacked.ndim - 1)
+    maskb = mask.reshape(bshape)
+    n_honest = jnp.maximum(1, m - jnp.sum(mask))
+    mean = jnp.sum(jnp.where(maskb, 0, stacked), axis=0) / n_honest
+    var = jnp.sum(jnp.where(maskb, 0, (stacked - mean) ** 2), axis=0) / n_honest
+    return mean, var
+
+
+def apply_to_rows(
+    attack: AttackLike,
+    stacked: jax.Array,
+    mask: jax.Array,
+    *,
+    alpha=None,
+    strength=None,
+    key: Optional[jax.Array] = None,
+    prev_agg: Optional[jax.Array] = None,
+    rnd=None,
+) -> jax.Array:
+    """Replace Byzantine rows of ``stacked`` ``(m, ...)`` per ``mask``.
+
+    Data attacks return ``stacked`` unchanged (they corrupt samples
+    upstream of the gradient computation — data/pipeline.py).
+    """
+    attack = as_attack(attack)
+    if attack.access == DATA:
+        return stacked
+    m = stacked.shape[0]
+    if alpha is None:
+        alpha = jnp.sum(mask) / m
+    if prev_agg is None and attack.adaptive:
+        prev_agg = jnp.zeros(stacked.shape[1:], stacked.dtype)
+    mean, var = honest_statistics(stacked, mask)
+    ctx = build_context(
+        attack, m=m, alpha=alpha, strength=strength, mask=mask, rows=stacked,
+        own=stacked, honest_mean=mean, honest_var=var, key=key,
+        prev_agg=prev_agg, rnd=rnd,
+    )
+    bad = attack.payload(ctx)
+    bshape = (m,) + (1,) * (stacked.ndim - 1)
+    return jnp.where(
+        mask.reshape(bshape), jnp.broadcast_to(bad, stacked.shape), stacked
+    )
+
+
+def payload_from_stats(
+    attack: AttackLike,
+    honest_mean: jax.Array,
+    honest_var: Optional[jax.Array],
+    *,
+    m: int,
+    alpha,
+    strength=None,
+    own: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+    prev_agg: Optional[jax.Array] = None,
+    rnd=None,
+) -> jax.Array:
+    """The bad-row value for the no-rows (psum/streaming) path.
+
+    ``own`` is this worker's local row when the caller has one (required
+    by local attacks that transform their own gradient).
+    """
+    attack = as_attack(attack)
+    if attack.access == OMNISCIENT:
+        raise ValueError(
+            f"attack {attack.name!r} is omniscient (needs per-worker rows) and "
+            "cannot run on the statistics-only (chunked/streaming) path; use the "
+            "gather or bucketed strategy"
+        )
+    if attack.access == DATA:
+        raise ValueError(f"data attack {attack.name!r} has no gradient payload")
+    if own is None and attack.reads_own:
+        raise ValueError(
+            f"attack {attack.name!r} reads the worker's own gradient row; the "
+            "caller must pass own= (honest_mean is only a shape donor)")
+    ref = own if own is not None else honest_mean
+    if prev_agg is None and attack.adaptive:
+        prev_agg = jnp.zeros_like(ref)
+    ctx = build_context(
+        attack, m=m, alpha=alpha, strength=strength, own=ref,
+        honest_mean=honest_mean, honest_var=honest_var, key=key,
+        prev_agg=prev_agg, rnd=rnd,
+    )
+    return attack.payload(ctx)
+
+
+def corrupt_labels(
+    attack: AttackLike, y: jax.Array, key: Optional[jax.Array], num_classes: int
+) -> jax.Array:
+    """Run a data attack's label corruption (identity for non-data attacks)."""
+    attack = as_attack(attack)
+    if attack.access != DATA:
+        return y
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return attack.corrupt_labels(y, key, num_classes)

@@ -1,0 +1,180 @@
+"""The registered attack library.
+
+Gradient-space formulas are written against :class:`AttackContext`; all
+use ``jnp`` ops on (possibly traced) ``alpha``/``strength`` so the
+scenario-matrix evaluator can vmap whole (attack x alpha x strength)
+sweeps under a single trace (attacks/matrix.py).
+
+Legacy-numerics contract: the attacks that existed as ``AttackConfig``
+names before the engine (sign_flip, large_value, alie, mean_shift,
+inner_product, label_flip, random_label) keep their exact formulas —
+core/attacks.py delegates here and tests (test_fed, test_distributed)
+assert bit-compatible behaviour across the gather and psum paths.
+
+Strength semantics per attack are documented inline; ``strength`` always
+scales damage monotonically (tests/test_attacks.py asserts this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from repro.attacks.base import DATA, LOCAL, OMNISCIENT, STATS, Attack, AttackContext
+from repro.attacks.registry import alias, register
+
+_VAR_EPS = 1e-12  # legacy epsilon under the sqrt (core/attacks.py)
+
+
+def _std(ctx: AttackContext) -> jax.Array:
+    return jnp.sqrt(ctx.honest_var + _VAR_EPS)
+
+
+# ------------------------------------------------------------------- stats
+
+
+def _sign_flip(ctx: AttackContext) -> jax.Array:
+    return -ctx.strength * ctx.honest_mean
+
+
+def _large_value(ctx: AttackContext) -> jax.Array:
+    return jnp.full_like(ctx.own, ctx.strength)
+
+
+def _alie(ctx: AttackContext) -> jax.Array:
+    # "A Little Is Enough" (Baruch et al. 2019) with an explicit z_max:
+    # shift every coordinate strength standard deviations below the honest
+    # mean — the classic hide-inside-the-spread payload.
+    return ctx.honest_mean - ctx.strength * _std(ctx)
+
+
+def _alie_fitted(ctx: AttackContext) -> jax.Array:
+    # Variance-fitted ALIE: z_max is COMPUTED from (m, alpha) as the
+    # largest shift for which the Byzantine rows still land inside the
+    # order-statistic band the defence keeps — Phi^-1((m - q - s)/(m - q))
+    # with s = floor(m/2) + 1 - q supporters needed to capture the median.
+    # ``strength`` multiplies the fitted z (1.0 = exactly fitted).
+    m = ctx.m
+    q = jnp.minimum(m - 1, jnp.ceil(ctx.alpha * m))
+    s = jnp.floor(m / 2.0) + 1.0 - q
+    phi = (m - q - s) / jnp.maximum(m - q, 1.0)
+    z = ndtri(jnp.clip(phi, 1e-4, 1.0 - 1e-4))
+    return ctx.honest_mean - ctx.strength * z * _std(ctx)
+
+
+def _mean_shift(ctx: AttackContext) -> jax.Array:
+    return ctx.honest_mean + ctx.strength * _std(ctx)
+
+
+def _ipm(ctx: AttackContext) -> jax.Array:
+    # Inner-product manipulation (Xie et al. 2020): send -eps * mean so the
+    # aggregate's inner product with the true gradient turns negative while
+    # each row's norm stays comparable to honest rows (eps = strength).
+    return -ctx.strength * ctx.honest_mean
+
+
+# --------------------------------------------------------------- omniscient
+
+
+def _mimic(ctx: AttackContext) -> jax.Array:
+    # Mimic/clone (Karimireddy et al. 2022): all colluders replay the most
+    # deviant HONEST row, over-representing one client; coordinate-wise
+    # defences cannot flag a value an honest worker really sent.  strength
+    # interpolates mean -> cloned row (1.0 = exact clone, >1 extrapolates).
+    m = ctx.rows.shape[0]
+    dev = ctx.rows - ctx.honest_mean
+    d2 = jnp.sum(dev.reshape(m, -1) ** 2, axis=1)
+    d2 = jnp.where(ctx.mask, -jnp.inf, d2)  # clone an honest row only
+    picked = jnp.take(ctx.rows, jnp.argmax(d2), axis=0)
+    return ctx.honest_mean + ctx.strength * (picked - ctx.honest_mean)
+
+
+def _max_damage_tm(ctx: AttackContext) -> jax.Array:
+    # Coordinate-wise max damage against trimmed mean: place all Byzantine
+    # mass AT the honest extreme on the side that opposes descent (the
+    # paper's worst case for Definition 2 — values inside the honest
+    # support can be trimmed but push honest extremes into the kept band).
+    # strength interpolates mean -> extreme; > 1 leaves the honest support.
+    bshape = (ctx.rows.shape[0],) + (1,) * (ctx.rows.ndim - 1)
+    maskb = ctx.mask.reshape(bshape)
+    lo = jnp.min(jnp.where(maskb, jnp.inf, ctx.rows), axis=0)
+    hi = jnp.max(jnp.where(maskb, -jnp.inf, ctx.rows), axis=0)
+    target = jnp.where(ctx.honest_mean > 0, lo, hi)
+    return ctx.honest_mean + ctx.strength * (target - ctx.honest_mean)
+
+
+# -------------------------------------------------------------------- local
+
+
+def _local_sign_flip(ctx: AttackContext) -> jax.Array:
+    # True local sign flip: each Byzantine worker flips ITS OWN gradient —
+    # no collusion, no oracle (contrast sign_flip, which needs the honest
+    # mean and is therefore stats-level).
+    return -ctx.strength * ctx.own
+
+
+def _gauss(ctx: AttackContext) -> jax.Array:
+    # Pure-noise gradients (Li et al. 2021's benign-but-broken baseline).
+    return ctx.strength * jax.random.normal(ctx.key, ctx.own.shape, jnp.float32).astype(
+        ctx.own.dtype
+    )
+
+
+def _zero(ctx: AttackContext) -> jax.Array:
+    # Free-rider / dropped update.  Strength has no effect by design.
+    return jnp.zeros_like(ctx.own)
+
+
+def _stale(ctx: AttackContext) -> jax.Array:
+    # Adaptive: replay the PREVIOUS round's broadcast aggregate (public
+    # state, so still local access) scaled by strength — a stale/echo
+    # gradient that poisons momentum-style dynamics.
+    return ctx.strength * jnp.broadcast_to(ctx.prev_agg, ctx.own.shape).astype(
+        ctx.own.dtype
+    )
+
+
+# --------------------------------------------------------------------- data
+
+
+def _flip_labels(y: jax.Array, key: jax.Array, num_classes: int) -> jax.Array:
+    del key
+    return (num_classes - 1) - y
+
+
+def _random_labels(y: jax.Array, key: jax.Array, num_classes: int) -> jax.Array:
+    return jax.random.randint(key, y.shape, 0, num_classes, dtype=y.dtype)
+
+
+# ------------------------------------------------------------- registration
+
+register(Attack("sign_flip", STATS, _sign_flip, strength=100.0,
+                summary="-s * honest mean (reverse attack)"))
+register(Attack("large_value", LOCAL, _large_value, strength=100.0,
+                summary="constant s in every coordinate"))
+register(Attack("alie", STATS, _alie, strength=1.0, needs_variance=True,
+                summary="mean - s*std (ALIE, explicit z_max = s)"))
+register(Attack("alie_fitted", STATS, _alie_fitted, strength=1.0, needs_variance=True,
+                summary="mean - s*z(m, alpha)*std (variance-fitted ALIE)"))
+register(Attack("mean_shift", STATS, _mean_shift, strength=1.0, needs_variance=True,
+                summary="mean + s*std omniscient shift"))
+register(Attack("ipm", STATS, _ipm, strength=1.0,
+                summary="-s * mean (inner-product manipulation)"))
+alias("inner_product", "ipm")
+register(Attack("mimic", OMNISCIENT, _mimic, strength=1.0,
+                summary="clone the most deviant honest row"))
+register(Attack("max_damage_tm", OMNISCIENT, _max_damage_tm, strength=1.0,
+                summary="honest extreme opposing descent (anti-trimmed-mean)"))
+register(Attack("local_sign_flip", LOCAL, _local_sign_flip, strength=1.0,
+                reads_own=True,
+                summary="-s * own gradient (no collusion)"))
+register(Attack("gauss", LOCAL, _gauss, strength=1.0, randomized=True,
+                summary="s * N(0, I) noise gradient"))
+register(Attack("zero", LOCAL, _zero, strength=1.0,
+                summary="zero gradient (free-rider)"))
+register(Attack("stale", LOCAL, _stale, strength=1.0, adaptive=True,
+                summary="s * previous broadcast aggregate (echo)"))
+register(Attack("label_flip", DATA, corrupt_labels=_flip_labels,
+                summary="y -> (C-1) - y on Byzantine shards"))
+register(Attack("random_label", DATA, corrupt_labels=_random_labels,
+                randomized=True, summary="iid uniform labels on Byzantine shards"))

@@ -1,0 +1,77 @@
+"""Adaptive per-round attack scheduling.
+
+Static mixtures (fed/rounds.AttackMixture ``fixed``/``cycle``) replay a
+predetermined attack sequence.  The greedy scheduler instead *adapts to
+the defence*: it explores each candidate attack once, observes the
+damage the server's own broadcast state reveals (every worker —
+Byzantine ones included — sees the per-round aggregate, so the observed
+update magnitude/err drift is public information), and then replays the
+most damaging attack, re-exploring periodically so a defence that
+adapts back is re-probed.  This is the "adaptive adversary" of Chen et
+al. 2017's lower-bound discussion: the attack may be a *function of the
+algorithm's trajectory*, not a fixed distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+class GreedyScheduler:
+    """Explore-then-exploit attack selection (deterministic, RNG-free).
+
+    ``pick(r)`` returns the index of the attack to run in round ``r``;
+    ``feedback(r, damage)`` reports the realized damage of that round's
+    attack (any monotone signal — err increase, update deviation).  Every
+    ``reexplore`` rounds the scheduler cycles through all candidates once
+    more, so it tracks non-stationary defences.
+    """
+
+    def __init__(self, num_attacks: int, reexplore: int = 16):
+        if num_attacks < 1:
+            raise ValueError("need at least one attack")
+        self.num_attacks = num_attacks
+        self.reexplore = max(num_attacks + 1, reexplore)
+        self._damage = [float("-inf")] * num_attacks
+        self._picked: dict = {}
+
+    def pick(self, r: int) -> int:
+        phase = r % self.reexplore
+        if phase < self.num_attacks:
+            idx = phase  # exploration sweep
+        else:
+            idx = max(range(self.num_attacks), key=lambda i: self._damage[i])
+        self._picked[r] = idx
+        return idx
+
+    def feedback(self, r: int, damage: float) -> None:
+        idx = self._picked.pop(r, None)
+        if idx is not None:
+            self._damage[idx] = float(damage)
+
+    def best(self) -> Optional[int]:
+        """Index of the currently most damaging attack (None before any
+        feedback)."""
+        if all(d == float("-inf") for d in self._damage):
+            return None
+        return max(range(self.num_attacks), key=lambda i: self._damage[i])
+
+
+def schedule_indices(
+    schedule: str, num_attacks: int, num_rounds: int,
+    damages: Optional[Sequence[float]] = None,
+) -> list:
+    """Static helper used by tests: the index sequence a schedule yields
+    against a fixed damage profile."""
+    if schedule == "fixed":
+        return [0] * num_rounds
+    if schedule == "cycle":
+        return [r % num_attacks for r in range(num_rounds)]
+    if schedule == "greedy":
+        sched = GreedyScheduler(num_attacks)
+        out = []
+        for r in range(num_rounds):
+            i = sched.pick(r)
+            out.append(i)
+            sched.feedback(r, damages[i] if damages is not None else 0.0)
+        return out
+    raise ValueError(f"unknown schedule {schedule!r}")

@@ -1,19 +1,17 @@
-"""Byzantine attack models.
+"""Byzantine attack compatibility shim over :mod:`repro.attacks`.
 
-The paper's threat model: an α-fraction of the m worker machines send
-*arbitrary* vectors to the master, possibly colluding and with full
-knowledge of the data and algorithm. We implement both kinds of attack the
-paper uses in its experiments (data corruption) plus standard gradient-space
-attacks from the Byzantine-ML literature, so that robustness can be stress
-tested beyond label flips.
+The attack *implementations* live in the registry-based engine
+(``repro.attacks``: base/registry/library/engine/schedule/matrix); this
+module keeps the original thin surface — :class:`AttackConfig` plus the
+``apply_data_attack`` / ``apply_gradient_attack`` / ``byzantine_payload``
+helpers — that the rest of the codebase (robust_gd, distributed,
+fed.rounds, data.pipeline, benchmarks) configures attacks with.
 
-Two interfaces:
-
-- **data attacks** operate on a batch ``{x, y}`` (per-worker shard);
-- **gradient attacks** operate on the stacked per-worker gradient matrix
-  ``(m, ...)`` together with a boolean Byzantine mask ``(m,)`` — rows of
-  Byzantine workers are replaced. This is applied at the aggregation point,
-  where every device can see the gathered per-worker rows.
+``AttackConfig.name`` may be ANY registered attack (``repro.attacks
+.registered()``), not just the legacy set; legacy names keep their exact
+legacy formulas and strength-field mapping (``scale`` for
+sign_flip/large_value, ``shift`` for alie/mean_shift), and the explicit
+``strength`` field overrides either when set.
 """
 from __future__ import annotations
 
@@ -23,6 +21,25 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import attacks as engine_pkg
+from repro.attacks import base as attack_base
+from repro.attacks import engine
+
+# attacks whose payload needs the honest per-coordinate variance —
+# derived from the registry's declared ``needs_variance`` flags, so a
+# newly registered variance-reading attack is picked up automatically
+# (the chunked/psum path uses this to decide whether to spend the extra
+# variance psum)
+NEEDS_VARIANCE = tuple(
+    n for n in engine_pkg.registered()
+    if engine_pkg.get_attack(n).needs_variance
+)
+
+# legacy strength-field mapping: which AttackConfig field feeds the
+# engine's ``strength`` knob for the pre-engine attack names
+_SCALE_NAMES = ("sign_flip", "large_value")
+_SHIFT_NAMES = ("alie", "mean_shift")
+
 
 @dataclasses.dataclass(frozen=True)
 class AttackConfig:
@@ -31,22 +48,42 @@ class AttackConfig:
     ``alpha`` is the Byzantine fraction; workers ``0 .. ceil(alpha*m)-1``
     are Byzantine (the choice of *which* workers is immaterial to
     coordinate-wise aggregators, which are permutation invariant).
+    ``name`` is any attack registered in repro.attacks (e.g. none,
+    label_flip, random_label, sign_flip, large_value, alie, alie_fitted,
+    mean_shift, ipm/inner_product, mimic, max_damage_tm, local_sign_flip,
+    gauss, zero, stale).
     """
 
-    name: str = "none"  # none|label_flip|random_label|sign_flip|large_value|alie|mean_shift|inner_product
+    name: str = "none"
     alpha: float = 0.0
-    scale: float = 100.0  # magnitude used by large_value
+    scale: float = 100.0  # magnitude used by sign_flip / large_value
     num_classes: int = 10  # used by label attacks
-    shift: float = 1.0  # used by mean_shift
+    shift: float = 1.0  # used by alie / mean_shift
+    strength: Optional[float] = None  # explicit engine strength (overrides)
 
     def num_byzantine(self, m: int) -> int:
-        import math
-
-        return min(m - 1, math.ceil(self.alpha * m)) if self.alpha > 0 else 0
+        # single definition of the Byzantine cut (engine.num_byzantine)
+        return engine.num_byzantine(self.alpha, m)
 
     def byzantine_mask(self, m: int) -> jax.Array:
-        q = self.num_byzantine(m)
-        return jnp.arange(m) < q
+        return engine.byzantine_mask(self.alpha, m)
+
+    def resolve(self):
+        """(Attack, strength) for the engine; (None, None) for 'none'."""
+        if self.name == "none":
+            return None, None
+        atk = engine_pkg.get_attack(self.name)
+        if self.strength is not None:
+            return atk, self.strength
+        if self.name in _SCALE_NAMES:
+            return atk, self.scale
+        if self.name in _SHIFT_NAMES:
+            return atk, self.shift
+        return atk, atk.strength
+
+    def is_data_attack(self) -> bool:
+        atk, _ = self.resolve()
+        return atk is not None and atk.access == attack_base.DATA
 
 
 # ---------------------------------------------------------------- data space
@@ -54,15 +91,16 @@ class AttackConfig:
 
 def label_flip(y: jax.Array, num_classes: int = 10) -> jax.Array:
     """The paper's first experiment: replace every label y with (C-1) - y."""
-    return (num_classes - 1) - y
+    return engine.corrupt_labels("label_flip", y, None, num_classes)
 
 
 def random_label(y: jax.Array, key: jax.Array, num_classes: int = 10) -> jax.Array:
     """The paper's one-round experiment: iid uniform labels."""
-    return jax.random.randint(key, y.shape, 0, num_classes, dtype=y.dtype)
+    return engine.corrupt_labels("random_label", y, key, num_classes)
 
 
-def apply_data_attack(cfg: AttackConfig, batch: dict, is_byzantine, key: Optional[jax.Array] = None) -> dict:
+def apply_data_attack(cfg: AttackConfig, batch: dict, is_byzantine,
+                      key: Optional[jax.Array] = None) -> dict:
     """Corrupt the labels of a (per-worker) batch if ``is_byzantine``.
 
     ``is_byzantine`` may be a traced boolean scalar (inside shard_map it is
@@ -70,77 +108,59 @@ def apply_data_attack(cfg: AttackConfig, batch: dict, is_byzantine, key: Optiona
     """
     if cfg.name == "none" or cfg.alpha == 0.0:
         return batch
+    atk, _ = cfg.resolve()
+    if atk.access != attack_base.DATA:
+        return batch  # gradient-space attacks don't touch the data
     y = batch["y"]
-    if cfg.name == "label_flip":
-        y_bad = label_flip(y, cfg.num_classes)
-    elif cfg.name == "random_label":
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        y_bad = random_label(y, key, cfg.num_classes)
-    else:
-        # gradient-space attacks don't touch the data
-        return batch
+    y_bad = engine.corrupt_labels(atk, y, key, cfg.num_classes)
     y_new = jnp.where(is_byzantine, y_bad, y)
     return {**batch, "y": y_new}
 
 
 # ------------------------------------------------------------ gradient space
 
-# attacks whose payload needs the honest per-coordinate variance
-NEEDS_VARIANCE = ("alie", "mean_shift")
-
 
 def byzantine_payload(cfg: AttackConfig, honest_mean: jax.Array,
-                      honest_var: Optional[jax.Array] = None) -> jax.Array:
+                      honest_var: Optional[jax.Array] = None, *,
+                      m: Optional[int] = None,
+                      own: Optional[jax.Array] = None,
+                      key: Optional[jax.Array] = None,
+                      prev_agg: Optional[jax.Array] = None) -> jax.Array:
     """The bad-row value for a gradient-space attack, given the honest
-    statistics the omniscient colluders observe.
+    statistics the colluders observe.
 
-    This is the single definition of the attack formulas: the
-    gathered-rows path (:func:`apply_gradient_attack`) computes the
-    statistics from the stacked matrix; the psum path
-    (``distributed._maybe_attack_chunked``) computes the identical
-    statistics with collectives — both feed them here, so the two paths
-    cannot drift. ``honest_var`` is required for ``NEEDS_VARIANCE``.
+    This is the statistics-path entry (engine.payload_from_stats): the
+    gathered-rows path computes the statistics from the stacked matrix;
+    the psum path (``distributed._maybe_attack_chunked``) computes the
+    identical statistics with collectives — both feed the same registry
+    payload formulas, so the two paths cannot drift.  ``honest_var`` is
+    required for ``NEEDS_VARIANCE`` names.  The keyword extras (``m``,
+    ``own``, ``key``, ``prev_agg``) unlock the engine attacks the legacy
+    names never needed; omniscient (rows-needing) attacks raise here.
     """
-    if cfg.name == "sign_flip":
-        return -cfg.scale * honest_mean
-    if cfg.name == "large_value":
-        return jnp.full_like(honest_mean, cfg.scale)
-    if cfg.name == "alie":
-        # "A Little Is Enough" (Baruch et al. 2019): colluding workers
-        # shift each coordinate by z_max standard deviations — the largest
-        # perturbation that still hides inside the honest spread, designed
-        # to defeat median/trimmed-mean-style defenses maximally.
-        # (cfg.shift plays the role of z_max — the number of honest
-        # standard deviations the colluders shift by)
-        return honest_mean - cfg.shift * jnp.sqrt(honest_var + 1e-12)
-    if cfg.name == "mean_shift":
-        # omniscient colluding attack: all Byzantine rows push the
-        # coordinate-wise statistics by a constant shift of the honest mean
-        return honest_mean + cfg.shift * jnp.sqrt(honest_var + 1e-12)
-    if cfg.name == "inner_product":
-        # push opposite to the honest mean direction, scaled to its norm
-        return -honest_mean
-    raise ValueError(f"unknown gradient attack {cfg.name!r}")
+    atk, strength = cfg.resolve()
+    if atk is None:
+        raise ValueError("byzantine_payload called with attack 'none'")
+    return engine.payload_from_stats(
+        atk, honest_mean, honest_var, m=m if m is not None else 0,
+        alpha=cfg.alpha, strength=strength, own=own, key=key, prev_agg=prev_agg)
 
 
-def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array) -> jax.Array:
+def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array,
+                          *, key: Optional[jax.Array] = None,
+                          prev_agg: Optional[jax.Array] = None,
+                          rnd=None) -> jax.Array:
     """Replace Byzantine rows of a stacked per-worker array ``(m, ...)``.
 
-    ``mask``: bool ``(m,)`` — True rows are Byzantine. Honest statistics
-    (mean of honest rows) are available to the attacker, matching the
-    omniscient threat model.
+    ``mask``: bool ``(m,)`` — True rows are Byzantine.  The attack sees
+    whatever its registered access level grants (honest statistics, all
+    rows, ...), matching the declared threat model.
     """
-    if cfg.name in ("none", "label_flip", "random_label") or cfg.alpha == 0.0:
+    if cfg.name == "none" or cfg.alpha == 0.0:
         return stacked
-    m = stacked.shape[0]
-    bshape = (m,) + (1,) * (stacked.ndim - 1)
-    maskb = mask.reshape(bshape)
-    n_honest = jnp.maximum(1, m - jnp.sum(mask))
-    honest_mean = jnp.sum(jnp.where(maskb, 0, stacked), axis=0) / n_honest
-    honest_var = None
-    if cfg.name in NEEDS_VARIANCE:
-        honest_var = jnp.sum(jnp.where(maskb, 0, (stacked - honest_mean) ** 2),
-                             axis=0) / n_honest
-    bad = byzantine_payload(cfg, honest_mean, honest_var)
-    return jnp.where(maskb, jnp.broadcast_to(bad, stacked.shape), stacked)
+    atk, strength = cfg.resolve()
+    if atk.access == attack_base.DATA:
+        return stacked  # data attacks corrupt samples upstream
+    return engine.apply_to_rows(
+        atk, stacked, mask, alpha=cfg.alpha, strength=strength, key=key,
+        prev_agg=prev_agg, rnd=rnd)

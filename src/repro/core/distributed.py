@@ -46,11 +46,14 @@ Two approximate strategies:
 
 Byzantine simulation: gradient-space attacks are applied where per-worker
 rows are visible, i.e. after the gather / all_to_all, using the row index
-(= source worker id) against the attack's Byzantine mask.
+(= source worker id) against the attack's Byzantine mask.  Attacks come
+from the repro.attacks registry via the AttackConfig shim; the chunked
+(psum) strategy supports data/local/stats access levels — omniscient
+attacks need gathered rows and raise there (see repro.attacks.base for
+the access taxonomy).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -87,11 +90,12 @@ def worker_index(axis_names: Sequence[str]) -> jax.Array:
     return idx
 
 
-def _maybe_attack(stacked: jax.Array, attack: Optional[AttackConfig], m: int) -> jax.Array:
+def _maybe_attack(stacked: jax.Array, attack: Optional[AttackConfig], m: int,
+                  key: Optional[jax.Array] = None) -> jax.Array:
     if attack is None or attack.name == "none" or attack.alpha == 0.0:
         return stacked
     mask = attack.byzantine_mask(m)
-    return apply_gradient_attack(attack, stacked, mask)
+    return apply_gradient_attack(attack, stacked, mask, key=key)
 
 
 # --------------------------------------------------------------------------
@@ -106,11 +110,14 @@ def robust_gather_agg(
     beta: float = 0.1,
     attack: Optional[AttackConfig] = None,
     agg_dtype=None,
+    attack_key=None,
 ):
     """All-gather per-worker gradients over the worker axes and aggregate.
 
     ``g``: pytree of local gradient leaves. Returns the aggregated pytree
-    (replicated across worker axes).
+    (replicated across worker axes).  ``attack_key`` seeds randomized
+    attacks (fold the step index in per training step — launch/steps
+    does — or every step replays the same draw).
     """
     m = axis_size(axis_names)
 
@@ -119,7 +126,7 @@ def robust_gather_agg(
         stacked = stacked.reshape((m,) + leaf.shape)
         if agg_dtype is not None:
             stacked = stacked.astype(agg_dtype)
-        stacked = _maybe_attack(stacked, attack, m)
+        stacked = _maybe_attack(stacked, attack, m, attack_key)
         out = aggregators.get_aggregator(method, beta)(stacked)
         return out.astype(leaf.dtype)
 
@@ -155,6 +162,7 @@ def _robust_scatter_flat(
     beta: float,
     attack: Optional[AttackConfig],
     agg_dtype,
+    attack_key=None,
 ) -> Tuple[jax.Array, int]:
     """Core of the bucketed strategies.
 
@@ -182,7 +190,7 @@ def _robust_scatter_flat(
     # rows: (m, bs) — row i is (flat) worker i's version of my bucket
     if agg_dtype is not None:
         rows = rows.astype(agg_dtype)
-    rows = _maybe_attack(rows, attack, m)
+    rows = _maybe_attack(rows, attack, m, attack_key)
     out = aggregators.get_aggregator(method, beta)(rows)
     return out.astype(flat.dtype), size
 
@@ -231,6 +239,7 @@ def robust_bucketed_agg(
     attack: Optional[AttackConfig] = None,
     agg_dtype=None,
     granularity: str = "leaf",
+    attack_key=None,
 ):
     """Exact robust aggregation with all-reduce-like byte volume.
 
@@ -258,7 +267,7 @@ def robust_bucketed_agg(
             flat = (leaves[grp[0]].reshape(-1) if len(grp) == 1 else
                     jnp.concatenate([leaves[i].reshape(-1) for i in grp]))
             mine, size = _robust_scatter_flat(flat, axis_names, method, beta,
-                                              attack, agg_dtype)
+                                              attack, agg_dtype, attack_key)
             full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)[:size]
             off = 0
             for i in grp:
@@ -268,7 +277,8 @@ def robust_bucketed_agg(
                 off += leaf.size
         return jax.tree.unflatten(treedef, out_leaves)
     flat, aux = _flatten_tree(g)
-    mine, size = _robust_scatter_flat(flat, axis_names, method, beta, attack, agg_dtype)
+    mine, size = _robust_scatter_flat(flat, axis_names, method, beta, attack,
+                                      agg_dtype, attack_key)
     full = jax.lax.all_gather(mine, axis_names, axis=0, tiled=True)
     full = full[:size]
     return _unflatten_tree(full, aux)
@@ -301,28 +311,44 @@ def _maybe_attack_chunked(
     attack: Optional[AttackConfig],
     axis_names: Sequence[str],
     m: int,
+    key: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Byzantine simulation without gathered rows: this worker's local
     flat gradient is replaced iff its worker index is under the attack's
-    Byzantine cut. The omniscient colluders' honest statistics are
-    reproduced with psums over the honest workers and fed to the shared
-    :func:`repro.core.attacks.byzantine_payload` formulas, so the chunked
-    strategy sees the identical threat model as gather/bucketed.
+    Byzantine cut.  The colluders' honest statistics are reproduced with
+    psums over the honest workers and fed to the registry payloads via
+    :func:`repro.core.attacks.byzantine_payload`, so the chunked strategy
+    sees the identical threat model as gather/bucketed — up to access:
+    omniscient (rows-needing) attacks like mimic/max_damage_tm cannot run
+    here and raise; local attacks use this worker's own row and a
+    worker-folded key.
     """
-    if attack is None or attack.alpha == 0.0 or attack.name in (
-            "none", "label_flip", "random_label"):
+    if attack is None or attack.alpha == 0.0 or attack.name == "none":
         return flat
+    if attack.is_data_attack():
+        return flat  # data attacks corrupt samples upstream of the gradient
     q = attack.num_byzantine(m)
     if q == 0:
         return flat
-    is_byz = worker_index(axis_names) < q
-    honest = jnp.where(is_byz, jnp.zeros_like(flat), flat)
-    honest_mean = jax.lax.psum(honest, axis_names) / (m - q)
-    honest_var = None
-    if attack.name in attacks_mod.NEEDS_VARIANCE:
-        dev = jnp.where(is_byz, jnp.zeros_like(flat), (flat - honest_mean) ** 2)
-        honest_var = jax.lax.psum(dev, axis_names) / (m - q)
-    bad = attacks_mod.byzantine_payload(attack, honest_mean, honest_var)
+    widx = worker_index(axis_names)
+    is_byz = widx < q
+    atk_spec = attack.resolve()[0]
+    honest_mean = honest_var = None
+    if attacks_mod.attack_base.access_rank(atk_spec.access) >= \
+            attacks_mod.attack_base.access_rank(attacks_mod.attack_base.STATS):
+        # the honest-statistics oracle costs one (or two) full-gradient
+        # psums — only stats-level colluders get it; local/data attacks
+        # keep the strategy's m-independent collective volume intact
+        honest = jnp.where(is_byz, jnp.zeros_like(flat), flat)
+        honest_mean = jax.lax.psum(honest, axis_names) / (m - q)
+        if atk_spec.needs_variance:  # declared on the Attack spec
+            dev = jnp.where(is_byz, jnp.zeros_like(flat), (flat - honest_mean) ** 2)
+            honest_var = jax.lax.psum(dev, axis_names) / (m - q)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    bad = attacks_mod.byzantine_payload(
+        attack, honest_mean, honest_var, m=m, own=flat,
+        key=jax.random.fold_in(key, widx))
     return jnp.where(is_byz, bad, flat)
 
 
@@ -335,6 +361,7 @@ def robust_chunked_agg(
     agg_dtype=None,
     nbins: int = 256,
     coord_chunk: int = 16384,
+    attack_key=None,
 ):
     """Approximate robust aggregation with m-independent collective volume.
 
@@ -370,7 +397,7 @@ def robust_chunked_agg(
         if agg_dtype is not None:
             flat = flat.astype(agg_dtype)
         flat = flat.astype(jnp.float32)
-        flat = _maybe_attack_chunked(flat, attack, axis_names, m)
+        flat = _maybe_attack_chunked(flat, attack, axis_names, m, attack_key)
         if method == "mean":
             out = jax.lax.psum(flat, axis_names) / m
             return out.reshape(leaf.shape).astype(leaf.dtype)
@@ -428,13 +455,15 @@ def robust_hierarchical_agg(
     method: str = "median",
     beta: float = 0.1,
     attack: Optional[AttackConfig] = None,
+    attack_key=None,
 ):
     """Two-level aggregation: within ``inner_axis`` (ICI), then across
     ``outer_axis`` (DCN). NOTE: median-of-medians is a different estimator
     from the global median — documented in DESIGN.md; use for DCN savings
     only when the per-pod Byzantine fraction is controlled.
     """
-    inner = robust_gather_agg(g, (inner_axis,), method, beta, attack)
+    inner = robust_gather_agg(g, (inner_axis,), method, beta, attack,
+                              attack_key=attack_key)
     return robust_gather_agg(inner, (outer_axis,), method, beta, attack=None)
 
 

@@ -15,7 +15,6 @@ or corrupt their messages at the aggregation point (gradient attacks).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -62,18 +61,31 @@ def robust_gd(
     per_worker_grads = jax.vmap(grad_fn, in_axes=(None, 0))
     agg = aggregators.get_aggregator(cfg.method, cfg.beta)
     mask = attack.byzantine_mask(m) if attack is not None else jnp.zeros((m,), bool)
+    attacking = attack is not None and attack.alpha > 0
+    base_key = jax.random.PRNGKey(0)
 
-    def step(w, _):
+    def step(carry, i):
+        # prev_g — the previous round's broadcast aggregate — is threaded
+        # through the scan so ADAPTIVE attacks (repro.attacks: stale, and
+        # anything reading ctx.prev_agg) see the trajectory, per-round keys
+        # drive randomized ones.
+        w, prev_g = carry
         grads = per_worker_grads(w, worker_data)  # leaves (m, ...)
-        if attack is not None and attack.alpha > 0:
-            grads = jax.tree.map(lambda g: apply_gradient_attack(attack, g, mask), grads)
+        if attacking:
+            k = jax.random.fold_in(base_key, i)
+            grads = jax.tree.map(
+                lambda g, p: apply_gradient_attack(
+                    attack, g, mask, key=k, prev_agg=p, rnd=i),
+                grads, prev_g)
         g = jax.tree.map(agg, grads)
         w_new = jax.tree.map(lambda p, d: p - cfg.step_size * d, w, g)
         w_new = _project(w_new, cfg.projection_radius)
         metric = trajectory_fn(w_new) if trajectory_fn is not None else jnp.float32(0)
-        return w_new, metric
+        return (w_new, g), metric
 
-    w_final, metrics = jax.lax.scan(step, w0, None, length=cfg.num_iters)
+    prev0 = jax.tree.map(jnp.zeros_like, w0)
+    (w_final, _), metrics = jax.lax.scan(
+        step, (w0, prev0), jnp.arange(cfg.num_iters))
     return w_final, metrics
 
 

@@ -20,7 +20,6 @@ from typing import Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.attacks import AttackConfig, label_flip, random_label
 

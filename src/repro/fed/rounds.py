@@ -15,22 +15,28 @@ aggregation paths:
   the exact aggregator — the small-cohort reference the approximate path
   is validated against.
 
-Byzantine behaviour plugs into the existing ``AttackConfig``: gradient
-attacks are applied per chunk with the chunk's Byzantine mask (derived
-from client ids), using chunk-local honest statistics — the colluders'
-"honest mean/std" oracle is the chunk they travel with, which matches
-``apply_gradient_attack`` exactly and keeps the attack computable in one
-streaming pass. Attack *mixtures* vary the attack across rounds
-(schedule='cycle') or draw one per round at fixed weights.
+Byzantine behaviour plugs into the ``AttackConfig`` shim over the
+repro.attacks registry: gradient attacks are applied per chunk with the
+chunk's Byzantine mask (derived from client ids), using chunk-local
+honest statistics — the colluders' "honest mean/std" oracle is the chunk
+they travel with, which matches ``apply_gradient_attack`` exactly and
+keeps the attack computable in one streaming pass.  Adaptive attacks see
+the previous round's broadcast aggregate; randomized ones get a
+(round, chunk)-folded key.  Attack *mixtures* vary the attack across
+rounds: deterministically (schedule='cycle'/'fixed') or adversarially
+(schedule='greedy' — repro.attacks.schedule.GreedyScheduler explores the
+candidate attacks, observes the realized per-round damage, and replays
+whichever hurts the defence most).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.attacks.schedule import GreedyScheduler
 from repro.core import aggregators
 from repro.core.attacks import AttackConfig, apply_gradient_attack
 from repro.fed import streaming
@@ -60,19 +66,33 @@ class AttackMixture:
 
     ``cycle``: round r uses attacks[r % len(attacks)] — deterministic
     mixtures like alternating sign_flip/alie. ``fixed``: always
-    attacks[0]. An empty tuple means no attack.
+    attacks[0]. ``greedy``: the adaptive adversary — explore each attack,
+    then replay the one that did most damage last time it ran (state held
+    by the :class:`GreedyScheduler` from :func:`make_scheduler`; feed it
+    the realized damage each round).  An empty tuple means no attack.
     """
 
     attacks: tuple = ()
-    schedule: str = "cycle"  # cycle|fixed
+    schedule: str = "cycle"  # cycle|fixed|greedy
 
-    def for_round(self, r: int) -> Optional[AttackConfig]:
+    def make_scheduler(self) -> Optional[GreedyScheduler]:
+        if self.schedule == "greedy" and self.attacks:
+            return GreedyScheduler(len(self.attacks))
+        return None
+
+    def for_round(self, r: int,
+                  scheduler: Optional[GreedyScheduler] = None) -> Optional[AttackConfig]:
         if not self.attacks:
             return None
         if self.schedule == "fixed":
             return self.attacks[0]
         if self.schedule == "cycle":
             return self.attacks[r % len(self.attacks)]
+        if self.schedule == "greedy":
+            if scheduler is None:
+                raise ValueError("greedy schedule needs the scheduler from "
+                                 "make_scheduler() (run_rounds manages one)")
+            return self.attacks[scheduler.pick(r)]
         raise ValueError(f"unknown schedule {self.schedule!r}")
 
 
@@ -81,13 +101,18 @@ def _chunk_bounds(total: int, chunk: int) -> list:
 
 
 def _make_chunk_fn(pop: ClientPopulation, w, ids, bounds,
-                   attack: Optional[AttackConfig]):
+                   attack: Optional[AttackConfig],
+                   prev_agg: Optional[jax.Array] = None, rnd: int = 0):
+    base_key = jax.random.fold_in(jax.random.PRNGKey(7), rnd)
+
     def chunk_fn(j: int) -> jax.Array:
         s, e = bounds[j]
         cids = ids[s:e]
         g = pop.client_grads(w, cids)  # (rows, d)
         if attack is not None and attack.alpha > 0:
-            g = apply_gradient_attack(attack, g, pop.is_byzantine(cids))
+            g = apply_gradient_attack(
+                attack, g, pop.is_byzantine(cids),
+                key=jax.random.fold_in(base_key, j), prev_agg=prev_agg, rnd=rnd)
         return g
 
     return chunk_fn
@@ -99,10 +124,12 @@ def aggregate_cohort(
     ids: jax.Array,
     rcfg: RoundConfig,
     attack: Optional[AttackConfig] = None,
+    prev_agg: Optional[jax.Array] = None,
+    rnd: int = 0,
 ) -> jax.Array:
     """One cohort's aggregated gradient, streaming or exact per rcfg.method."""
     bounds = _chunk_bounds(ids.shape[0], rcfg.chunk_clients)
-    chunk_fn = _make_chunk_fn(pop, w, ids, bounds, attack)
+    chunk_fn = _make_chunk_fn(pop, w, ids, bounds, attack, prev_agg, rnd)
     if rcfg.method in STREAMING_METHODS:
         method = {"approx_median": "median",
                   "approx_trimmed_mean": "trimmed_mean",
@@ -131,16 +158,26 @@ def run_rounds(
     w = jnp.zeros((pop.cfg.dim,)) if w0 is None else w0
     state = opt.init(w)
     root = jax.random.PRNGKey(rcfg.seed)
+    scheduler = mixture.make_scheduler()
     history = []
+    prev_g = None  # previous round's broadcast aggregate (adaptive attacks)
+    prev_err = float(jnp.linalg.norm(w - pop.w_star))
     for r in range(rcfg.num_rounds):
-        attack = mixture.for_round(r)
+        attack = mixture.for_round(r, scheduler)
         ids = pop.sample_cohort(jax.random.fold_in(root, r), rcfg.cohort_size)
-        g = aggregate_cohort(pop, w, ids, rcfg, attack)
+        g = aggregate_cohort(pop, w, ids, rcfg, attack, prev_agg=prev_g, rnd=r)
         w, state = opt.update(g, state, w, jnp.int32(r))
+        err = float(jnp.linalg.norm(w - pop.w_star))
+        if scheduler is not None:
+            # the adversary's reward: how much this round moved the model
+            # AWAY from the optimum (observable drift — see attacks.schedule)
+            scheduler.feedback(r, err - prev_err)
+        prev_err = err
+        prev_g = g
         history.append({
             "round": r,
             "attack": attack.name if attack is not None else "none",
             "grad_norm": float(jnp.linalg.norm(g)),
-            "err": float(jnp.linalg.norm(w - pop.w_star)),
+            "err": err,
         })
     return w, history

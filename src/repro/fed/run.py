@@ -45,8 +45,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--alpha", type=float, default=0.0,
                    help="Byzantine fraction of the population")
     p.add_argument("--attack", default="sign_flip",
-                   help="comma-separated per-round attack cycle "
-                        "(sign_flip, alie, large_value, mean_shift, inner_product)")
+                   help="comma-separated per-round attack candidates — any "
+                        "registered name (python -c 'from repro import attacks; "
+                        "print(attacks.registered())')")
+    p.add_argument("--schedule", default="cycle",
+                   choices=["cycle", "fixed", "greedy"],
+                   help="per-round attack schedule; greedy = adaptive "
+                        "adversary (explore, then replay the most damaging)")
     p.add_argument("--attack-scale", type=float, default=100.0)
     p.add_argument("--attack-shift", type=float, default=1.0)
     p.add_argument("--heterogeneity", type=float, default=0.0)
@@ -82,7 +87,7 @@ def main(argv=None) -> int:
     print(f"rounds: {rcfg.num_rounds} x cohort {rcfg.cohort_size} "
           f"(chunks of {rcfg.chunk_clients}), method={rcfg.method}, "
           f"nbins={rcfg.nbins}")
-    w, history = run_rounds(pop, rcfg, AttackMixture(attacks))
+    w, history = run_rounds(pop, rcfg, AttackMixture(attacks, schedule=args.schedule))
     for h in history:
         print(f"  round {h['round']:3d}  attack={h['attack']:<12s} "
               f"|g|={h['grad_norm']:9.4f}  |w-w*|={h['err']:.4f}")

@@ -18,7 +18,6 @@ Usage:
   python -m repro.launch.dryrun --all --out dryrun_results.jsonl
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time

@@ -227,7 +227,6 @@ def analyze(text: str) -> Dict[str, float]:
             if op.opcode == "dot":
                 total += _dot_flops(op, shapes)
             elif op.opcode == "while":
-                called = op.called()
                 # rest contains condition=%c, body=%b
                 cond_m = re.search(r"condition=%?([\w.\-]+)", op.rest)
                 body_m = re.search(r"body=%?([\w.\-]+)", op.rest)

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import argparse
 import json
-from collections import defaultdict
 
 from repro.launch.roofline import ICI_BW, ICI_LINKS, format_seconds
 
@@ -22,7 +21,6 @@ def recompute_collective(r):
 
 
 def load(path: str):
-    rows = []
     seen = {}
     with open(path) as f:
         for line in f:

@@ -21,7 +21,6 @@ output once).
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict
 

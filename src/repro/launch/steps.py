@@ -17,7 +17,6 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -306,7 +305,37 @@ def make_train_step(
     attack: Optional[AttackConfig] = None,
 ):
     """Returns jit'd ``train_step(params, opt_state, batch, step) ->
-    (params, opt_state, metrics)`` with robust aggregation over workers."""
+    (params, opt_state, metrics)`` with robust aggregation over workers.
+
+    ``attack`` may be any repro.attacks registry name via the
+    AttackConfig shim; the attack's declared gradient-access level is
+    validated against the collective strategy HERE (at build time) rather
+    than deep inside the traced collective: the chunked/psum strategy
+    never materializes per-worker rows, so omniscient attacks (mimic,
+    max_damage_tm, ...) need gather/bucketed.
+    """
+    if attack is not None and attack.name != "none" and attack.alpha > 0:
+        atk_spec, _ = attack.resolve()  # raises early on unknown names
+        from repro.attacks.base import OMNISCIENT
+
+        if pcfg.agg_strategy == "chunked" and atk_spec.access == OMNISCIENT:
+            raise ValueError(
+                f"attack {attack.name!r} is omniscient (needs per-worker rows); "
+                "the chunked strategy only reproduces stats/local/data access — "
+                "use agg_strategy='gather' or 'bucketed'")
+        if atk_spec.adaptive:
+            # the train step has no previous-aggregate state to feed the
+            # payload — silently substituting zeros would measure the
+            # 'zero' attack while reporting this one
+            raise ValueError(
+                f"attack {attack.name!r} is adaptive (reads the previous "
+                "aggregate), which the distributed train step does not "
+                "thread; use core.robust_gd or repro.fed for adaptive attacks")
+        if atk_spec.randomized and pcfg.param_mode == "fsdp":
+            raise ValueError(
+                f"attack {attack.name!r} is randomized; the fsdp backward-pass "
+                "attack path has no per-step key — use agg_strategy gather/"
+                "bucketed/chunked with param_mode='replicated'")
     waxes = mesh_lib.worker_axes(mesh)
     shp = mesh_lib.mesh_shape_dict(mesh)
     ctx = ShardCtx(batch_axes=(), model_axes=mesh_lib.model_axes(mesh), mesh_shape=shp,
@@ -329,6 +358,8 @@ def make_train_step(
 
     def body(params, opt_state, batch, step):
         loss, grads = jax.value_and_grad(local_loss)(params, batch)
+        # step-folded key: randomized attacks draw fresh noise each step
+        atk_key = jax.random.fold_in(jax.random.PRNGKey(0), step)
         if fsdp:
             # gradients of sharded leaves arrive already robustly reduced
             # (the gathers' backward IS the robust reduce-scatter); only
@@ -336,20 +367,24 @@ def make_train_step(
             agg = jax.tree.map(
                 lambda d, g: g if d >= 0 else distributed.robust_gather_agg(
                     {"x": g}, waxes, pcfg.agg_method, pcfg.agg_beta, attack,
-                    agg_dtype)["x"],
+                    agg_dtype, attack_key=atk_key)["x"],
                 dims, grads)
         elif pcfg.agg_strategy == "gather":
             agg = distributed.robust_gather_agg(
-                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype)
+                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype,
+                attack_key=atk_key)
         elif pcfg.agg_strategy == "bucketed":
             agg = distributed.robust_bucketed_agg(
-                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype)
+                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype,
+                attack_key=atk_key)
         elif pcfg.agg_strategy == "chunked":
             agg = distributed.robust_chunked_agg(
-                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype)
+                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype,
+                attack_key=atk_key)
         elif pcfg.agg_strategy == "hierarchical" and len(waxes) == 2:
             agg = distributed.robust_hierarchical_agg(
-                grads, waxes[1], waxes[0], pcfg.agg_method, pcfg.agg_beta, attack)
+                grads, waxes[1], waxes[0], pcfg.agg_method, pcfg.agg_beta, attack,
+                attack_key=atk_key)
         else:
             raise ValueError(f"unknown agg strategy {pcfg.agg_strategy!r}")
         new_params, new_opt = opt.update(agg, opt_state, params, step)

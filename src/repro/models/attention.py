@@ -13,8 +13,6 @@ aggregation) and XLA:TPU already pipelines this scan well.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

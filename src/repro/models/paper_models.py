@@ -9,7 +9,6 @@ container is offline — see DESIGN.md §Assumptions).
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

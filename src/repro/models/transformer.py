@@ -23,7 +23,6 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -649,12 +648,12 @@ def prefill(
     cache = init_cache(cfg, b, cache_len)
     x = params["embed"].astype(_dt(cfg))[tokens]
     enc_out = None
-    n_prefix = 0
     if cfg.frontend == "audio" and cfg.n_enc_layers:
         enc_out = _encoder_fwd(params, frontend, cfg, ctx, remat=False, kv_block=kv_block)
     elif cfg.frontend == "vision":
+        # prefill keeps the visual prefix in the cache; only the final-token
+        # logits are consumed, so no prefix-stripping here (contrast fwd)
         x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
-        n_prefix = frontend.shape[1]
     x = ctx.constrain(x, ("b", None, None))
     groups, tail = layer_groups(cfg)
     (pattern, n_super) = groups[0]

@@ -4,7 +4,6 @@
 plain unit test still collects and runs (the seed container does not
 ship hypothesis).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

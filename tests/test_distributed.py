@@ -9,7 +9,7 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
+from conftest import requires_jax_set_mesh, requires_jax_shard_map
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -47,6 +47,7 @@ def smap(f, mesh, in_specs, out_specs):
 """
 
 
+@requires_jax_shard_map
 def test_gather_agg_matches_oracle():
     run_sub(PRELUDE + """
 mesh = jax.make_mesh((8,), ("data",))
@@ -64,6 +65,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_bucketed_agg_matches_gather_and_oracle():
     run_sub(PRELUDE + """
 mesh = jax.make_mesh((8,), ("data",))
@@ -92,6 +94,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_bucketed_leaf_vs_flat_granularity():
     run_sub(PRELUDE + """
 mesh = jax.make_mesh((8,), ("data",))
@@ -115,6 +118,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_bucketed_multi_axis_exact_global_median():
     """pod×data (2×4): bucketed a2a aggregation = global median over all 8
     workers (NOT median-of-medians)."""
@@ -134,6 +138,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_hierarchical_median_of_medians():
     """Hierarchical (pod-local median, then cross-pod median) is a
     DIFFERENT estimator from the global median — verify it equals the
@@ -156,6 +161,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_gradient_attack_applied_at_aggregation():
     """Byzantine rows injected at the aggregation point: mean breaks,
     median survives."""
@@ -179,6 +185,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_trimmed_mean_distributed():
     run_sub(PRELUDE + """
 mesh = jax.make_mesh((8,), ("data",))
@@ -196,6 +203,7 @@ print("OK")
 """)
 
 
+@requires_jax_shard_map
 def test_robust_param_gather_fsdp_bwd():
     """custom_vjp param gather: forward = all-gather; backward = robust
     reduce-scatter (exact coordinate-wise median of per-worker grads)."""
@@ -230,6 +238,7 @@ print("OK")
 """)
 
 
+@requires_jax_set_mesh
 def test_end_to_end_train_step_robustness():
     """Full production train step on a 4x2 debug mesh: median training
     stays stable under a sign-flip Byzantine worker while mean training
@@ -274,6 +283,7 @@ print("OK")
 """, devices=8)
 
 
+@requires_jax_set_mesh
 def test_fsdp_mode_matches_gather_median():
     """param_mode=fsdp (robust reduce-scatter in bwd) produces the exact
     same update as the paper-faithful gather-median, with params/optimizer
@@ -311,6 +321,7 @@ print("OK")
 """)
 
 
+@requires_jax_set_mesh
 def test_bucketed_strategy_in_train_step():
     run_sub(PRELUDE + """
 from repro.configs import get_smoke_config, ParallelConfig

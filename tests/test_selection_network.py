@@ -8,7 +8,6 @@ with numpy min/max in the sweeps (the program is backend-agnostic — only
 for the production executors. ``hypothesis`` is optional, matching the
 tests/test_aggregators.py pattern.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

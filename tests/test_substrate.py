@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline, optimizers, checkpointing, configs,
 attacks, sharding rules, HLO analyzer."""
-import os
 import tempfile
 
 import jax
@@ -11,7 +10,7 @@ import pytest
 from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_config, get_smoke_config
 from repro.core.attacks import AttackConfig, label_flip
 from repro.data.pipeline import DataConfig, make_classification_shards, make_lm_batch
-from repro.data.synthetic import linreg, lm_batch, mnist_analog
+from repro.data.synthetic import lm_batch, mnist_analog
 from repro.models import transformer as T
 from repro.models.sharding import param_partition_spec
 from repro.optim.optimizers import get_optimizer

@@ -1,10 +1,12 @@
 """Benchmark harness: one entry per paper table/figure + rate scalings +
-aggregation micro-bench. Prints ``name,us_per_call,derived`` CSV and
-exits non-zero if any requested suite fails (so CI can gate on it).
+aggregation micro-bench + the communication-efficiency grid. Prints
+``name,us_per_call,derived`` CSV and exits non-zero if any requested
+suite fails (so CI can gate on it).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only table2,rates
   PYTHONPATH=src python -m benchmarks.run --only agg --json --smoke --gate-agg
+  PYTHONPATH=src python -m benchmarks.run --only comm --json-comm --smoke
 
 ``--json [PATH]`` writes the agg micro-bench records (op, m, d, µs/call,
 speedup vs the XLA-sort baseline) to PATH (default BENCH_agg.json) — the
@@ -12,6 +14,13 @@ perf-trajectory artifact CI uploads on every run. ``--gate-agg``
 additionally fails the run if the pruned selection network falls below
 ``GATE_MIN_SPEEDUP``× the XLA-sort median baseline at m=32 (a margin
 below 1.0 so shared-runner timing noise can't fail the build).
+
+``--json-comm [PATH]`` writes the comm-efficiency grid (tau × strategy
+× attack: error, theory bound, bytes-to-target — see
+benchmarks/comm_efficiency.py) to PATH (default BENCH_comm.json); the
+comm suite ALWAYS gates (theory bounds + the ≥4× byte-saving floor
+under ALIE) — its gates are deterministic statistics, not wall-clock
+timings, so there is no noise margin to waive.
 """
 from __future__ import annotations
 
@@ -20,7 +29,7 @@ import json
 import sys
 import traceback
 
-SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg"]
+SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg", "comm"]
 
 GATE_M = 32  # the gated worker count (the ROADMAP's deployment size)
 # Timing gate with a safety margin: on shared CI runners wall time is
@@ -55,6 +64,10 @@ def main() -> None:
                     metavar="PATH",
                     help="write the agg micro-bench records to PATH "
                          "(default BENCH_agg.json)")
+    ap.add_argument("--json-comm", nargs="?", const="BENCH_comm.json",
+                    default=None, metavar="PATH",
+                    help="write the comm-efficiency grid to PATH "
+                         "(default BENCH_comm.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="shrunken agg sweep for CI wall-clock budgets")
     ap.add_argument("--gate-agg", action="store_true",
@@ -66,6 +79,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = []
     agg_records = None
+    comm_payload = None
     for suite in only:
         try:
             if suite == "table2":
@@ -82,10 +96,23 @@ def main() -> None:
                 from benchmarks import robustness_matrix as mod
             elif suite == "agg":
                 from benchmarks import agg_microbench as mod
+            elif suite == "comm":
+                from benchmarks import comm_efficiency as mod
             else:
                 raise ValueError(f"unknown suite {suite}")
             if suite == "agg":
                 agg_records = mod.run(verbose=True, smoke=args.smoke)
+            elif suite == "comm":
+                # evaluate once and gate on the returned payload, so a
+                # violating run still writes --json-comm evidence without
+                # re-computing the grid
+                comm_payload = mod.evaluate(
+                    mod.SMOKE if args.smoke else mod.CommConfig(), verbose=True)
+                if comm_payload["violations"] or comm_payload["failed_gates"]:
+                    raise AssertionError(
+                        f"comm-efficiency gates failed: "
+                        f"{len(comm_payload['violations'])} theory violations, "
+                        f"{len(comm_payload['failed_gates'])} byte-saving failures")
             else:
                 mod.run(verbose=True)
         except Exception:  # noqa: BLE001
@@ -99,6 +126,13 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {args.json} ({len(agg_records)} records)", file=sys.stderr)
+
+    if args.json_comm is not None and comm_payload is not None:
+        comm_payload = {**comm_payload, "smoke": args.smoke}
+        with open(args.json_comm, "w") as f:
+            json.dump(comm_payload, f, indent=1)
+        print(f"wrote {args.json_comm} ({len(comm_payload['records'])} records)",
+              file=sys.stderr)
 
     if args.gate_agg:
         problems = _gate_agg(agg_records or [])

@@ -5,12 +5,23 @@ its own data (some devices hold random labels — the paper's one-round
 Byzantine model); the server aggregates the m local models with a single
 coordinate-wise median. One communication round total.
 
+Also demonstrates the federated-scale path of the same algorithm
+(`repro.rounds.one_round_streaming`): the m local solutions are folded
+into the streaming histogram sketch chunk-by-chunk, so the (m, d)
+solution matrix never exists — the path that takes one-round to
+m = 10⁵ clients.
+
 Run:  PYTHONPATH=src python examples/one_round_federated.py
 """
 import jax
 
 from repro.core.attacks import AttackConfig
-from repro.core.one_round import OneRoundConfig, make_gd_local_solver, one_round
+from repro.rounds import (
+    OneRoundConfig,
+    make_gd_local_solver,
+    one_round,
+    one_round_streaming,
+)
 from repro.core.robust_gd import make_worker_shards
 from repro.data.synthetic import mnist_analog
 from repro.models.paper_models import init_logreg, logreg_accuracy, logreg_loss
@@ -42,6 +53,13 @@ def main():
         w = one_round(solver, shards, OneRoundConfig(method))
         acc = float(logreg_accuracy(w, test))
         print(f"  {method:7s} aggregation: test accuracy {acc*100:5.1f}%")
+
+    # federated-scale path: identical estimator through the streaming
+    # histogram sketch (within one bin width), no (m, d) matrix
+    w = one_round_streaming(solver, shards, OneRoundConfig("median"),
+                            chunk_workers=4, nbins=512)
+    acc = float(logreg_accuracy(w, test))
+    print(f"  median (streaming sketch): test accuracy {acc*100:5.1f}%")
 
 
 if __name__ == "__main__":

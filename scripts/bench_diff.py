@@ -1,10 +1,19 @@
-"""Diff two BENCH_agg.json files and print per-case speedup deltas.
+"""Diff two benchmark JSON artifacts and print per-case deltas.
 
-Used by the CI bench job to compare the fresh run against the committed
-baseline in the job summary (markdown table).  Informational only — the
-hard gate stays benchmarks/run.py --gate-agg (0.7x floor vs the XLA-sort
-baseline); this diff makes drift visible per (op, m, d) case so a slow
-regression inside the gate margin still shows up in CI history.
+Used by the CI bench job to compare fresh runs against the committed
+baselines in the job summary (markdown tables).  Informational only —
+the hard gates stay in benchmarks/run.py (``--gate-agg``) and
+benchmarks/comm_efficiency.py (theory bounds + byte-saving floor); this
+diff makes drift visible per case so a slow regression inside the gate
+margins still shows up in CI history.
+
+Handles both artifact schemas, keyed off the payload's ``suite`` field:
+
+- ``agg``  (BENCH_agg.json)  — (op, m, d) cases: µs/call + speedup
+  vs the XLA-sort baseline (timing, noisy on shared runners);
+- ``comm`` (BENCH_comm.json) — (tau, strategy, attack) cells: final
+  error, theory bound, rounds/bytes to the fixed target error
+  (deterministic statistics — any delta is a real behaviour change).
 
     python scripts/bench_diff.py --base OLD.json --new NEW.json
 """
@@ -15,20 +24,17 @@ import json
 import sys
 
 
-def _index(payload: dict) -> dict:
-    return {(r["op"], r["m"], r["d"]): r for r in payload.get("records", [])}
+def _fmt(v, spec=".2f", suffix=""):
+    if isinstance(v, (int, float)):
+        return f"{v:{spec}}{suffix}"
+    return "—"
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--base", required=True, help="committed baseline json")
-    ap.add_argument("--new", required=True, help="fresh run json")
-    args = ap.parse_args(argv)
-    with open(args.base) as f:
-        base = _index(json.load(f))
-    with open(args.new) as f:
-        new = _index(json.load(f))
+def _diff_agg(base: dict, new: dict) -> None:
+    def index(payload):
+        return {(r["op"], r["m"], r["d"]): r for r in payload.get("records", [])}
 
+    base, new = index(base), index(new)
     print("### Agg micro-bench vs committed baseline")
     print()
     print("| op | m | d | base µs | new µs | µs Δ | base speedup | new speedup |")
@@ -42,15 +48,68 @@ def main(argv=None) -> int:
                   f"{nr['speedup'] if nr['speedup'] is not None else '—'} |")
             continue
         dus = nr["us"] - br["us"]
-        bs = br.get("speedup")
-        ns = nr.get("speedup")
-        fmt = lambda v: f"{v:.2f}x" if isinstance(v, (int, float)) else "—"
         print(f"| {op} | {m} | {d} | {br['us']:.1f} | {nr['us']:.1f} | "
-              f"{dus:+.1f} | {fmt(bs)} | {fmt(ns)} |")
+              f"{dus:+.1f} | {_fmt(br.get('speedup'), '.2f', 'x')} | "
+              f"{_fmt(nr.get('speedup'), '.2f', 'x')} |")
+    _dropped(base, new)
+
+
+def _diff_comm(base: dict, new: dict) -> None:
+    def index(payload):
+        return {(str(r["tau"]), r["strategy"], r["attack"]): r
+                for r in payload.get("records", [])}
+
+    base, new = index(base), index(new)
+    print("### Comm-efficiency grid vs committed baseline")
+    print()
+    print("| tau | strategy | attack | base err | new err | err Δ | "
+          "base bytes→target | new bytes→target |")
+    print("|---|---|---|---|---|---|---|---|")
+    def tau_order(k):
+        tau = k[0]
+        return (k[1], k[2], float("inf") if tau == "inf" else int(tau))
+
+    for key in sorted(new, key=tau_order):
+        tau, strategy, attack = key
+        nr = new[key]
+        br = base.get(key)
+        if br is None:
+            print(f"| {tau} | {strategy} | {attack} | — | {nr['err']:.4f} | "
+                  f"new case | — | {_fmt(nr.get('bytes_to_target'), ',.0f')} |")
+            continue
+        derr = nr["err"] - br["err"]
+        print(f"| {tau} | {strategy} | {attack} | {br['err']:.4f} | "
+              f"{nr['err']:.4f} | {derr:+.4f} | "
+              f"{_fmt(br.get('bytes_to_target'), ',.0f')} | "
+              f"{_fmt(nr.get('bytes_to_target'), ',.0f')} |")
+    _dropped(base, new)
+
+
+def _dropped(base: dict, new: dict) -> None:
     dropped = sorted(set(base) - set(new))
     if dropped:
         print()
         print(f"dropped cases (in baseline, not in fresh run): {dropped}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", required=True, help="committed baseline json")
+    ap.add_argument("--new", required=True, help="fresh run json")
+    args = ap.parse_args(argv)
+    with open(args.base) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    suite = new.get("suite", "agg")
+    if base.get("suite", "agg") != suite:
+        print(f"suite mismatch: baseline {base.get('suite')!r} vs "
+              f"fresh {suite!r}", file=sys.stderr)
+        return 2
+    if suite == "comm":
+        _diff_comm(base, new)
+    else:
+        _diff_agg(base, new)
     return 0
 
 

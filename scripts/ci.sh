@@ -3,9 +3,17 @@
 #
 #   scripts/ci.sh             full tier-1 suite
 #   scripts/ci.sh fast        quick subset (-m fast) for per-push feedback
-#   scripts/ci.sh bench       agg micro-bench smoke: writes BENCH_agg.json and
+#   scripts/ci.sh bench       agg micro-bench smoke + comm-efficiency grid:
+#                             writes BENCH_agg.json and BENCH_comm.json and
 #                             FAILS if the pruned selection network is slower
-#                             than 0.7x the XLA-sort median baseline at m=32
+#                             than 0.7x the XLA-sort median baseline at m=32,
+#                             if any comm cell violates its core/theory.py
+#                             bound, or if tau>=4 local-update rounds save
+#                             less than 4x bytes vs tau=1 under ALIE
+#   scripts/ci.sh docs        registry-generated README tables
+#                             (python -m repro.docs --check): FAILS if the
+#                             attack/aggregator/strategy tables drifted from
+#                             the registries (regenerate: python -m repro.docs)
 #   scripts/ci.sh robustness  attack x aggregator x alpha scenario matrix
 #                             (repro.attacks.matrix --smoke): writes
 #                             ROBUSTNESS.smoke.json (the committed
@@ -30,7 +38,14 @@ if [ "${1:-}" = "fast" ]; then
     exec python -m pytest -q -m fast
 fi
 if [ "${1:-}" = "bench" ]; then
-    exec python -m benchmarks.run --only agg --json BENCH_agg.json --smoke --gate-agg
+    # agg timings are --smoke (wall-clock budget); the comm grid is fast
+    # and deterministic, so it runs its committed full config for clean
+    # per-cell diffs against the BENCH_comm.json baseline
+    python -m benchmarks.run --only agg --json BENCH_agg.json --smoke --gate-agg || exit 1
+    exec python -m benchmarks.run --only comm --json-comm BENCH_comm.json
+fi
+if [ "${1:-}" = "docs" ]; then
+    exec python -m repro.docs --check
 fi
 if [ "${1:-}" = "robustness" ]; then
     exec python -m repro.attacks.matrix --smoke --json ROBUSTNESS.smoke.json

@@ -106,6 +106,13 @@ class ParallelConfig:
     attn_chunk: int = 1024  # kv-block size for chunked attention (0 = plain)
     agg_dtype: str = ""  # '' = aggregate in gradient dtype
     seq_parallel: bool = False  # sequence parallelism between layers
+    # communication rounds (repro.rounds): τ local SGD steps between
+    # robust aggregations — 1 = aggregate every step (Algorithm 1); >1
+    # scans τ local steps inside the train step so the collective fires
+    # once per round (τ× fewer collective rounds; DESIGN.md
+    # §Communication rounds)
+    local_steps: int = 1
+    local_lr: float = 0.1  # local SGD lr used when local_steps > 1
 
 
 @dataclasses.dataclass(frozen=True)

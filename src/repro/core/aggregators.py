@@ -9,8 +9,9 @@ in :mod:`repro.kernels`.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -217,6 +218,88 @@ def approx_coordinate_trimmed_mean(x: jax.Array, beta: float, nbins: int = 256) 
     return out.reshape(x.shape[1:]).astype(x.dtype)
 
 
+# --------------------------------------------------------------- registry
+#
+# The registry is the single source of truth for every surface that
+# enumerates aggregators: ``get_aggregator`` dispatch, the generated
+# README aggregator table (python -m repro.docs), and the deliverable
+# tests that pin docs coverage.  ``make(beta)`` builds the aggregation
+# function; ``breakdown`` is the asymptotic breakdown point as a human-
+# readable string (what fraction of arbitrarily-corrupted rows the
+# estimator tolerates — the docs-table column).
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorSpec:
+    """A registered aggregator: factory + documented properties."""
+
+    name: str
+    make: Callable[[float], AggFn]  # beta -> aggregation fn
+    exact: bool  # exact order statistics vs sketch/iterative approximation
+    breakdown: str  # breakdown point, human-readable (docs table)
+    summary: str = ""
+
+
+_AGGREGATORS: Dict[str, AggregatorSpec] = {}
+
+
+def register_aggregator(spec: AggregatorSpec) -> AggregatorSpec:
+    if spec.name in _AGGREGATORS:
+        raise ValueError(f"aggregator {spec.name!r} already registered")
+    _AGGREGATORS[spec.name] = spec
+    return spec
+
+
+def get_aggregator_spec(name: str) -> AggregatorSpec:
+    try:
+        return _AGGREGATORS[name]
+    except KeyError:
+        raise ValueError(f"unknown aggregation method: {name!r}") from None
+
+
+def registered_aggregators() -> Tuple[str, ...]:
+    """Registered aggregator names, registration order (== docs order)."""
+    return tuple(_AGGREGATORS)
+
+
+register_aggregator(AggregatorSpec(
+    "mean", lambda beta: coordinate_mean, exact=True, breakdown="0",
+    summary="plain average — the non-robust baseline"))
+register_aggregator(AggregatorSpec(
+    "median", lambda beta: coordinate_median, exact=True, breakdown="1/2",
+    summary="coordinate-wise median (paper Definition 1)"))
+register_aggregator(AggregatorSpec(
+    "trimmed_mean",
+    lambda beta: functools.partial(coordinate_trimmed_mean, beta=beta),
+    exact=True, breakdown="β",
+    summary="coordinate-wise β-trimmed mean (paper Definition 2)"))
+register_aggregator(AggregatorSpec(
+    "approx_median", lambda beta: approx_coordinate_median,
+    exact=False, breakdown="1/2",
+    summary="histogram-sketch median, error ≤ one bin width (fed/chunked)"))
+register_aggregator(AggregatorSpec(
+    "approx_trimmed_mean",
+    lambda beta: functools.partial(approx_coordinate_trimmed_mean, beta=beta),
+    exact=False, breakdown="β",
+    summary="histogram-sketch β-trimmed mean, error ≤ one bin width"))
+register_aggregator(AggregatorSpec(
+    "geometric_median", lambda beta: geometric_median,
+    exact=False, breakdown="1/2",
+    summary="Weiszfeld vector median (Minsker 2015); gather-only"))
+register_aggregator(AggregatorSpec(
+    "krum",
+    # beta doubles as the declared Byzantine fraction for Krum
+    lambda beta: lambda x: krum(x, num_byzantine=int(beta * x.shape[0])),
+    exact=True, breakdown="(m−2)/2m",
+    summary="Krum selection rule (Blanchard et al. 2017); gather-only"))
+register_aggregator(AggregatorSpec(
+    "multi_krum",
+    lambda beta: lambda x: krum(x, num_byzantine=int(beta * x.shape[0]),
+                                multi=max(1, x.shape[0] // 2)),
+    exact=True, breakdown="(m−2)/2m",
+    summary="multi-Krum: average of the m/2 best-scored rows; gather-only"))
+
+
 def get_aggregator(method: str, beta: float = 0.1) -> AggFn:
     """Return an aggregation function ``(m, ...) -> (...)`` by name.
 
@@ -234,26 +317,12 @@ def get_aggregator(method: str, beta: float = 0.1) -> AggFn:
 
     - ``approx_median``        CDF inversion of a 256-bin histogram;
     - ``approx_trimmed_mean``  same sketch with per-bin sums.
+
+    Dispatch is registry-based (:func:`registered_aggregators` /
+    :func:`get_aggregator_spec`); the registry also feeds the generated
+    README aggregator table (``python -m repro.docs``).
     """
-    if method == "mean":
-        return coordinate_mean
-    if method == "median":
-        return coordinate_median
-    if method == "trimmed_mean":
-        return functools.partial(coordinate_trimmed_mean, beta=beta)
-    if method == "approx_median":
-        return approx_coordinate_median
-    if method == "approx_trimmed_mean":
-        return functools.partial(approx_coordinate_trimmed_mean, beta=beta)
-    if method == "geometric_median":
-        return geometric_median
-    if method == "krum":
-        # beta doubles as the declared Byzantine fraction for Krum
-        return lambda x: krum(x, num_byzantine=int(beta * x.shape[0]))
-    if method == "multi_krum":
-        return lambda x: krum(x, num_byzantine=int(beta * x.shape[0]),
-                              multi=max(1, x.shape[0] // 2))
-    raise ValueError(f"unknown aggregation method: {method!r}")
+    return get_aggregator_spec(method).make(beta)
 
 
 def tree_aggregate(grads_stacked, method: str, beta: float = 0.1):

@@ -1,74 +1,36 @@
-"""Algorithm 2 — Robust One-round Algorithm (paper Section 5).
+"""Compatibility wrapper — Algorithm 2 now lives in :mod:`repro.rounds`.
 
-Each worker machine computes its local empirical risk minimizer; the
-master outputs the coordinate-wise median of the m local solutions.
-Theorem 7 guarantees the Õ(α/√n + 1/√(nm) + 1/n) rate for strongly
-convex quadratic losses; the paper's experiments (Table 4) show it also
-works well empirically for the logistic loss.
+The one-round algorithm (paper Section 5, Theorem 7) grew from this
+module's original 74-line ``vmap`` toy into the communication-round
+subsystem:
 
-Local solvers:
-- ``quadratic``: exact closed form ŵ_i = −H_i⁻¹ p_i (Definition 9);
-- ``gd``: a fixed budget of full-batch GD steps on the local loss
-  (used for the logistic-regression experiment).
+- ``repro.rounds.one_round``        single-host reference (this module's
+                                    old surface, engine-native attacks);
+- ``repro.rounds.one_round_streaming``  federated scale via the
+                                    streaming histogram sketch;
+- ``repro.rounds.one_round_distributed``  shard_map + collective
+                                    strategies (gather/bucketed/chunked);
+- ``repro.rounds.local_update``     the τ-interpolation between
+                                    Algorithm 1 and one-round.
+
+This wrapper keeps the historical import path
+(``repro.core.one_round``) working for existing callers (benchmarks,
+examples); new code should import from :mod:`repro.rounds`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from repro.rounds.one_round import (  # noqa: F401
+    OneRoundConfig,
+    make_gd_local_solver,
+    one_round,
+    one_round_streaming,
+    quadratic_local_solver,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import aggregators
-from repro.core.attacks import AttackConfig, apply_gradient_attack
-
-
-@dataclasses.dataclass(frozen=True)
-class OneRoundConfig:
-    method: str = "median"  # mean|median|trimmed_mean
-    beta: float = 0.1
-    local_steps: int = 200  # for the gd solver
-    local_lr: float = 0.5
-
-
-def one_round(
-    local_solver: Callable,  # (worker_batch) -> w_hat (pytree)
-    worker_data,  # leaves (m, n, ...)
-    cfg: OneRoundConfig,
-    attack: Optional[AttackConfig] = None,
-):
-    """Run Algorithm 2: vmap the local solver over workers, aggregate."""
-    m = jax.tree.leaves(worker_data)[0].shape[0]
-    w_hats = jax.vmap(local_solver)(worker_data)  # leaves (m, ...)
-    if attack is not None and attack.alpha > 0:
-        mask = attack.byzantine_mask(m)
-        w_hats = jax.tree.map(lambda w: apply_gradient_attack(attack, w, mask), w_hats)
-    agg = aggregators.get_aggregator(cfg.method, cfg.beta)
-    return jax.tree.map(agg, w_hats)
-
-
-def quadratic_local_solver(batch):
-    """Exact local ERM for quadratic regression loss ½‖y − Xw‖²/n.
-
-    H_i = XᵀX/n (+ tiny ridge for Assumption 7's a.s. strong convexity),
-    p_i = −Xᵀy/n, ŵ_i = −H_i⁻¹ p_i.
-    """
-    x, y = batch
-    n = x.shape[0]
-    h = x.T @ x / n + 1e-6 * jnp.eye(x.shape[1])
-    p = -(x.T @ y) / n
-    return -jnp.linalg.solve(h, p)
-
-
-def make_gd_local_solver(loss_fn: Callable, w0, steps: int, lr: float):
-    """Local full-batch GD for non-quadratic losses (e.g. logistic)."""
-
-    def solver(batch):
-        def step(w, _):
-            g = jax.grad(loss_fn)(w, batch)
-            return jax.tree.map(lambda p, d: p - lr * d, w, g), None
-
-        w, _ = jax.lax.scan(step, w0, None, length=steps)
-        return w
-
-    return solver
+__all__ = [
+    "OneRoundConfig",
+    "one_round",
+    "one_round_streaming",
+    "quadratic_local_solver",
+    "make_gd_local_solver",
+]

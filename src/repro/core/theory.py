@@ -103,6 +103,16 @@ def median_rate(alpha: float, n: int, m: int) -> float:
     return optimal_rate(alpha, n, m) + 1.0 / n
 
 
+def one_round_rate(alpha: float, n: int, m: int) -> float:
+    """Theorem 7: the one-round algorithm's Õ(α/√n + 1/√(nm) + 1/n) rate
+    for strongly convex quadratic losses (constants and log factors
+    dropped) — the same order as median GD (eq. 3), achieved with ONE
+    communication round.  Gates the one-round cells of the comm-
+    efficiency grid (benchmarks/comm_efficiency.py) and the Theorem 7
+    rate checks in tests/test_rounds.py."""
+    return median_rate(alpha, n, m)  # same order; distinct name for callers
+
+
 def loglog_slope(xs, ys) -> float:
     """OLS slope of log(y) on log(x) — used to check empirical scalings."""
     lx = [math.log(x) for x in xs]

@@ -1,0 +1,185 @@
+"""Registry-generated reference docs: ``python -m repro.docs``.
+
+The attack, aggregator, and collective-strategy tables in README.md are
+GENERATED from the live registries — the single sources of truth every
+runtime surface already dispatches through:
+
+- attacks:     ``repro.attacks.registered()`` (name, access level,
+               behaviour flags, default strength, payload summary);
+- aggregators: ``repro.core.aggregators.registered_aggregators()``
+               (name, exact/approx estimator, breakdown point);
+- strategies:  ``repro.rounds.comm.registered_strategies()`` (name,
+               estimator, per-device collective bytes per round, highest
+               reproducible attack access level).
+
+Each table lives between ``<!-- generated:NAME ... -->`` and
+``<!-- end:generated:NAME -->`` markers; everything outside the markers
+is hand-written and untouched.  Registering a new attack / aggregator /
+strategy and forgetting to regenerate fails CI (``scripts/ci.sh docs``
+runs ``--check``), so the README cannot drift from the code.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.docs            # rewrite README.md
+    PYTHONPATH=src python -m repro.docs --check    # fail (exit 1) on drift
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_README = os.path.normpath(os.path.join(_HERE, "..", "..", "README.md"))
+
+BEGIN = "<!-- generated:{name} (python -m repro.docs; do not edit by hand) -->"
+END = "<!-- end:generated:{name} -->"
+
+
+def _cell(c) -> str:
+    # literal pipes (|g| in the byte formulas) must be escaped inside
+    # markdown table cells
+    return str(c).replace("|", "\\|")
+
+
+def _md_table(header, rows) -> str:
+    lines = ["| " + " | ".join(header) + " |",
+             "|" + "|".join("---" for _ in header) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(_cell(c) for c in r) + " |")
+    return "\n".join(lines)
+
+
+def attack_table() -> str:
+    from repro import attacks
+
+    rows = []
+    for name in attacks.registered():
+        a = attacks.get_attack(name)
+        flags = [f for f, on in (
+            ("adaptive", a.adaptive),
+            ("randomized", a.randomized),
+            ("needs-variance", a.needs_variance),
+            ("reads-own", a.reads_own),
+        ) if on]
+        rows.append((
+            f"`{a.name}`",
+            a.access + (" (**adaptive**)" if a.adaptive else ""),
+            ", ".join(flags) if flags else "—",
+            "—" if a.access == "data" else f"{a.strength:g}",
+            a.summary,
+        ))
+    return _md_table(
+        ("attack", "access", "flags", "default strength", "payload"), rows)
+
+
+def aggregator_table() -> str:
+    from repro.core import aggregators
+
+    rows = []
+    for name in aggregators.registered_aggregators():
+        s = aggregators.get_aggregator_spec(name)
+        rows.append((
+            f"`{s.name}`",
+            "exact" if s.exact else "approx",
+            s.breakdown,
+            s.summary,
+        ))
+    return _md_table(
+        ("aggregator", "estimator", "breakdown point", "note"), rows)
+
+
+def strategy_table() -> str:
+    from repro.rounds import comm
+
+    rows = []
+    for name in comm.registered_strategies():
+        s = comm.get_strategy_spec(name)
+        rows.append((
+            f"`{s.name}`",
+            "exact" if s.exact else "approx",
+            s.bytes_formula,
+            s.max_access,
+            s.summary,
+        ))
+    return _md_table(
+        ("strategy", "estimator", "collective bytes / device·round",
+         "max attack access", "note"), rows)
+
+
+TABLES = {
+    "attacks": attack_table,
+    "aggregators": aggregator_table,
+    "strategies": strategy_table,
+}
+
+
+def render(text: str) -> str:
+    """Replace every generated block in ``text`` with fresh registry
+    content.  Raises if a marker pair is missing or malformed — a README
+    without the markers cannot be kept in sync."""
+    for name, build in TABLES.items():
+        begin, end = BEGIN.format(name=name), END.format(name=name)
+        if begin not in text or end not in text:
+            raise ValueError(
+                f"README is missing the generated-block markers for {name!r}: "
+                f"expected {begin!r} .. {end!r}")
+        pattern = re.compile(
+            re.escape(begin) + r".*?" + re.escape(end), flags=re.DOTALL)
+        if len(pattern.findall(text)) != 1:
+            raise ValueError(f"marker pair for {name!r} must appear exactly once")
+        text = pattern.sub(begin + "\n" + build() + "\n" + end, text)
+    return text
+
+
+def check(readme: str = DEFAULT_README) -> list:
+    """Return a list of drift problems (empty = README matches registries)."""
+    with open(readme) as f:
+        current = f.read()
+    try:
+        fresh = render(current)
+    except ValueError as e:
+        return [str(e)]
+    if fresh != current:
+        return [f"{readme} is out of date with the registries; "
+                "regenerate with: PYTHONPATH=src python -m repro.docs"]
+    return []
+
+
+def write(readme: str = DEFAULT_README) -> bool:
+    """Regenerate in place; returns True if the file changed."""
+    with open(readme) as f:
+        current = f.read()
+    fresh = render(current)
+    if fresh != current:
+        with open(readme, "w") as f:
+            f.write(fresh)
+        return True
+    return False
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.docs",
+        description="Regenerate the registry-backed README tables "
+                    "(attacks, aggregators, collective strategies)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the tables match the registries; exit 1 on "
+                         "drift without writing anything (the CI docs gate)")
+    ap.add_argument("--readme", default=DEFAULT_README, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.check:
+        problems = check(args.readme)
+        for p in problems:
+            print(f"DOCS DRIFT: {p}", file=sys.stderr)
+        if not problems:
+            print(f"{args.readme}: generated tables up to date")
+        return 1 if problems else 0
+    changed = write(args.readme)
+    print(f"{args.readme}: {'updated' if changed else 'already up to date'}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -98,6 +98,38 @@ class ClientPopulation:
 
         return jax.vmap(grad_one)(client_ids)
 
+    @functools.partial(jax.jit, static_argnums=(0, 3))
+    def client_deltas(self, w: jax.Array, client_ids: jax.Array,
+                      local_steps: int, local_lr: float) -> jax.Array:
+        """Accumulated local gradients after ``local_steps`` local SGD
+        steps from the broadcast iterate ``w``: (k, d).
+
+        Each client descends on its OWN regenerated shard at ``local_lr``
+        and transmits Δ_i = Σ_k ∇f_i(w_i^k) — the local-update round
+        payload (repro.rounds.local_update semantics: the model delta
+        divided by the local lr, kept as a gradient running sum).  With
+        ``local_steps=1`` this matches :meth:`client_grads` (same math;
+        the scan body may fuse differently at the last ulp).
+        """
+
+        # shared scan-and-accumulate round body: rounds.distributed
+        # .scan_local_sgd (imported lazily — fed must stay importable
+        # without pulling the rounds package at module load)
+        from repro.rounds.distributed import scan_local_sgd
+
+        def delta_one(cid):
+            x, y = self._client_batch_one(cid)
+            n = x.shape[0]
+
+            def vg(wi):
+                r = x @ wi - y
+                return 0.5 * jnp.mean(r * r), x.T @ r / n
+
+            delta, _ = scan_local_sgd(vg, w, local_steps, local_lr)
+            return delta
+
+        return jax.vmap(delta_one)(client_ids)
+
     # ------------------------------------------------------------ byzantine
 
     def is_byzantine(self, client_ids: jax.Array) -> jax.Array:

@@ -2,9 +2,15 @@
 → optimizer update.
 
 Each round the server samples a cohort from the client population,
-streams the cohort's gradients in fixed-size chunks through an
-aggregator, and applies one optimizer step (repro.optim stack). Two
-aggregation paths:
+streams the cohort's payloads in fixed-size chunks through an
+aggregator, and applies one optimizer step (repro.optim stack).  The
+per-client payload is either the local full-batch gradient
+(``local_steps=1``, FedSGD) or — local-update cohort rounds, the
+repro.rounds τ-interpolation — the accumulated gradient of
+``local_steps`` local SGD steps at ``local_lr``
+(:meth:`~repro.fed.population.ClientPopulation.client_deltas`), robustly
+aggregated once per round and rescaled by 1/τ so the optimizer's lr
+semantics are τ-independent.  Two aggregation paths:
 
 - **streaming** (``method`` in STREAMING_METHODS): the two-pass histogram
   sketch of fed.streaming — never materializes the ``(cohort, d)``
@@ -58,6 +64,11 @@ class RoundConfig:
     optimizer: str = "sgd"
     lr: float = 0.2
     seed: int = 0
+    # local-update cohort rounds (repro.rounds τ-interpolation): each
+    # sampled client runs local_steps local SGD steps at local_lr and
+    # transmits its accumulated local gradient; 1 = plain FedSGD rounds
+    local_steps: int = 1
+    local_lr: float = 0.1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,13 +113,20 @@ def _chunk_bounds(total: int, chunk: int) -> list:
 
 def _make_chunk_fn(pop: ClientPopulation, w, ids, bounds,
                    attack: Optional[AttackConfig],
-                   prev_agg: Optional[jax.Array] = None, rnd: int = 0):
+                   prev_agg: Optional[jax.Array] = None, rnd: int = 0,
+                   local_steps: int = 1, local_lr: float = 0.1):
     base_key = jax.random.fold_in(jax.random.PRNGKey(7), rnd)
 
     def chunk_fn(j: int) -> jax.Array:
         s, e = bounds[j]
         cids = ids[s:e]
-        g = pop.client_grads(w, cids)  # (rows, d)
+        if local_steps > 1:
+            # local-update round: clients transmit accumulated local
+            # gradients; the attack corrupts the TRANSMITTED deltas, same
+            # threat surface as the gradient case
+            g = pop.client_deltas(w, cids, local_steps, local_lr)  # (rows, d)
+        else:
+            g = pop.client_grads(w, cids)  # (rows, d)
         if attack is not None and attack.alpha > 0:
             g = apply_gradient_attack(
                 attack, g, pop.is_byzantine(cids),
@@ -127,9 +145,12 @@ def aggregate_cohort(
     prev_agg: Optional[jax.Array] = None,
     rnd: int = 0,
 ) -> jax.Array:
-    """One cohort's aggregated gradient, streaming or exact per rcfg.method."""
+    """One cohort's aggregated gradient (or accumulated local-update
+    delta when ``rcfg.local_steps > 1``), streaming or exact per
+    rcfg.method."""
     bounds = _chunk_bounds(ids.shape[0], rcfg.chunk_clients)
-    chunk_fn = _make_chunk_fn(pop, w, ids, bounds, attack, prev_agg, rnd)
+    chunk_fn = _make_chunk_fn(pop, w, ids, bounds, attack, prev_agg, rnd,
+                              rcfg.local_steps, rcfg.local_lr)
     if rcfg.method in STREAMING_METHODS:
         method = {"approx_median": "median",
                   "approx_trimmed_mean": "trimmed_mean",
@@ -166,6 +187,14 @@ def run_rounds(
         attack = mixture.for_round(r, scheduler)
         ids = pop.sample_cohort(jax.random.fold_in(root, r), rcfg.cohort_size)
         g = aggregate_cohort(pop, w, ids, rcfg, attack, prev_agg=prev_g, rnd=r)
+        # adaptive attacks must see the aggregate at TRANSMITTED-delta
+        # scale (what the clients observe broadcast), not the rescaled
+        # optimizer input — matches rounds.local_update_gd semantics
+        prev_g = g
+        if rcfg.local_steps > 1:
+            # rescale the aggregated Σ-of-local-gradients delta to a mean
+            # local gradient so optimizer lr semantics match local_steps=1
+            g = g / rcfg.local_steps
         w, state = opt.update(g, state, w, jnp.int32(r))
         err = float(jnp.linalg.norm(w - pop.w_star))
         if scheduler is not None:
@@ -173,7 +202,6 @@ def run_rounds(
             # AWAY from the optimum (observable drift — see attacks.schedule)
             scheduler.feedback(r, err - prev_err)
         prev_err = err
-        prev_g = g
         history.append({
             "round": r,
             "attack": attack.name if attack is not None else "none",

@@ -58,6 +58,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--noise", type=float, default=1.0)
     p.add_argument("--optimizer", default="sgd")
     p.add_argument("--lr", type=float, default=0.2)
+    p.add_argument("--local-steps", type=int, default=1,
+                   help="tau: local SGD steps per round (repro.rounds "
+                        "local-update interpolation; 1 = FedSGD)")
+    p.add_argument("--local-lr", type=float, default=0.1,
+                   help="local SGD lr used when --local-steps > 1")
     p.add_argument("--seed", type=int, default=0)
     return p
 
@@ -73,7 +78,8 @@ def main(argv=None) -> int:
         num_rounds=args.rounds, cohort_size=args.cohort,
         chunk_clients=args.chunk, method=args.method, beta=args.beta,
         nbins=args.nbins, backend=args.backend, optimizer=args.optimizer,
-        lr=args.lr, seed=args.seed)
+        lr=args.lr, seed=args.seed, local_steps=args.local_steps,
+        local_lr=args.local_lr)
     attacks = ()
     if args.alpha > 0:
         attacks = tuple(
@@ -86,7 +92,7 @@ def main(argv=None) -> int:
           f"heterogeneity={pcfg.heterogeneity}")
     print(f"rounds: {rcfg.num_rounds} x cohort {rcfg.cohort_size} "
           f"(chunks of {rcfg.chunk_clients}), method={rcfg.method}, "
-          f"nbins={rcfg.nbins}")
+          f"nbins={rcfg.nbins}, tau={rcfg.local_steps}")
     w, history = run_rounds(pop, rcfg, AttackMixture(attacks, schedule=args.schedule))
     for h in history:
         print(f"  round {h['round']:3d}  attack={h['attack']:<12s} "

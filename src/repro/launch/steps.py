@@ -27,6 +27,8 @@ from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.core import distributed
 from repro.core.attacks import AttackConfig
 from repro.launch import mesh as mesh_lib
+from repro.rounds import comm
+from repro.rounds import distributed as rounds_dist
 from repro.models import transformer as T
 from repro.models.sharding import ShardCtx, tree_partition_specs
 from repro.optim.optimizers import Optimizer
@@ -316,13 +318,10 @@ def make_train_step(
     """
     if attack is not None and attack.name != "none" and attack.alpha > 0:
         atk_spec, _ = attack.resolve()  # raises early on unknown names
-        from repro.attacks.base import OMNISCIENT
-
-        if pcfg.agg_strategy == "chunked" and atk_spec.access == OMNISCIENT:
-            raise ValueError(
-                f"attack {attack.name!r} is omniscient (needs per-worker rows); "
-                "the chunked strategy only reproduces stats/local/data access — "
-                "use agg_strategy='gather' or 'bucketed'")
+        # registry-backed access-vs-strategy check (rounds.comm): e.g.
+        # omniscient attacks need gathered rows, which the chunked/psum
+        # strategy never materializes
+        comm.validate_attack_strategy(attack, pcfg.agg_strategy)
         if atk_spec.adaptive:
             # the train step has no previous-aggregate state to feed the
             # payload — silently substituting zeros would measure the
@@ -342,6 +341,16 @@ def make_train_step(
                    seq_parallel=pcfg.seq_parallel)
     agg_dtype = jnp.dtype(pcfg.agg_dtype) if pcfg.agg_dtype else None
     fsdp = pcfg.param_mode == "fsdp"
+    tau = pcfg.local_steps
+    if tau < 1:
+        raise ValueError(f"local_steps must be >= 1, got {tau}")
+    if tau > 1 and fsdp:
+        # fsdp fuses the robust reduction into every backward pass (one
+        # collective per LOCAL step via the param-gather custom_vjp),
+        # which defeats the whole point of local-update rounds
+        raise ValueError(
+            "local_steps > 1 needs param_mode='replicated': the fsdp "
+            "robust reduce-scatter fires a collective per local step")
 
     if fsdp:
         top_transform, block_provider = _make_providers(cfg, mesh, pcfg, attack)
@@ -357,7 +366,17 @@ def make_train_step(
                              kv_block=pcfg.attn_chunk)
 
     def body(params, opt_state, batch, step):
-        loss, grads = jax.value_and_grad(local_loss)(params, batch)
+        if tau == 1:
+            loss, grads = jax.value_and_grad(local_loss)(params, batch)
+        else:
+            # communication round: scan tau local SGD steps on this
+            # worker's batch shard and transmit the ACCUMULATED local
+            # gradient — the collective below fires once per round, not
+            # per local step (HLO-asserted in tests/test_rounds.py);
+            # shared scan body: rounds.distributed.scan_local_sgd
+            grads, loss = rounds_dist.scan_local_sgd(
+                lambda p: jax.value_and_grad(local_loss)(p, batch),
+                params, tau, pcfg.local_lr)
         # step-folded key: randomized attacks draw fresh noise each step
         atk_key = jax.random.fold_in(jax.random.PRNGKey(0), step)
         if fsdp:
@@ -369,24 +388,16 @@ def make_train_step(
                     {"x": g}, waxes, pcfg.agg_method, pcfg.agg_beta, attack,
                     agg_dtype, attack_key=atk_key)["x"],
                 dims, grads)
-        elif pcfg.agg_strategy == "gather":
-            agg = distributed.robust_gather_agg(
-                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype,
-                attack_key=atk_key)
-        elif pcfg.agg_strategy == "bucketed":
-            agg = distributed.robust_bucketed_agg(
-                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype,
-                attack_key=atk_key)
-        elif pcfg.agg_strategy == "chunked":
-            agg = distributed.robust_chunked_agg(
-                grads, waxes, pcfg.agg_method, pcfg.agg_beta, attack, agg_dtype,
-                attack_key=atk_key)
-        elif pcfg.agg_strategy == "hierarchical" and len(waxes) == 2:
-            agg = distributed.robust_hierarchical_agg(
-                grads, waxes[1], waxes[0], pcfg.agg_method, pcfg.agg_beta, attack,
-                attack_key=atk_key)
         else:
-            raise ValueError(f"unknown agg strategy {pcfg.agg_strategy!r}")
+            agg = rounds_dist.aggregate_by_strategy(
+                grads, waxes, pcfg.agg_strategy, pcfg.agg_method, pcfg.agg_beta,
+                attack, agg_dtype, attack_key=atk_key)
+        if tau > 1:
+            # hand the optimizer the MEAN local gradient so lr semantics
+            # match tau=1 (the robust aggregate of Σ_k g_k, rescaled —
+            # scaling after aggregation commutes with coordinate-wise
+            # aggregators)
+            agg = jax.tree.map(lambda g: g / tau, agg)
         new_params, new_opt = opt.update(agg, opt_state, params, step)
         sq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(agg))
         if fsdp:

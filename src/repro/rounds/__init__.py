@@ -1,0 +1,46 @@
+"""repro.rounds — the communication-round subsystem.
+
+Everything about HOW OFTEN the workers talk, as opposed to WHAT the
+aggregation computes (core.aggregators) or WHICH collective carries it
+(core.distributed):
+
+- ``comm``         per-strategy byte accounting (:class:`CommBudget`,
+                   the StrategySpec registry feeding the generated docs)
+                   and build-time attack-vs-strategy access validation;
+- ``one_round``    Algorithm 2 (paper Section 5, Theorem 7): vmap
+                   reference, streaming-histogram federated scale;
+- ``local_update`` robust local-update GD — τ local steps per robust
+                   aggregation, interpolating Algorithm 1 (τ=1, bit-for-
+                   bit robust_gd) to the one-round algorithm (τ=∞);
+- ``distributed``  the shard_map round programs + the shared
+                   strategy-name dispatcher used by launch/steps.
+
+See DESIGN.md §Communication rounds for the τ-interpolation semantics
+and EXPERIMENTS.md §Communication for the bytes-vs-error methodology.
+"""
+from repro.rounds.comm import (  # noqa: F401
+    CommBudget,
+    StrategySpec,
+    get_strategy_spec,
+    register_strategy,
+    registered_strategies,
+    resolve_attack,
+    validate_attack_strategy,
+)
+from repro.rounds.distributed import (  # noqa: F401
+    aggregate_by_strategy,
+    make_local_update_round,
+    one_round_distributed,
+)
+from repro.rounds.local_update import (  # noqa: F401
+    LocalUpdateConfig,
+    local_update_gd,
+    run_local_update_rounds,
+)
+from repro.rounds.one_round import (  # noqa: F401
+    OneRoundConfig,
+    make_gd_local_solver,
+    one_round,
+    one_round_streaming,
+    quadratic_local_solver,
+)

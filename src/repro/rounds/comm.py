@@ -1,0 +1,241 @@
+"""Communication accounting: per-strategy byte costs and round budgets.
+
+The communication-efficiency axis of the reproduction (ISSUE 4 /
+ROADMAP "fast as the hardware allows") needs a *model* of what each
+collective strategy moves per round, so that error-vs-bytes trade-offs
+(benchmarks/comm_efficiency.py) and the generated strategy docs
+(``python -m repro.docs``) share one source of truth.  This module is
+that source: a registry of :class:`StrategySpec` entries — one per
+``core.distributed`` strategy — each declaring
+
+- the per-device collective byte volume of ONE aggregation round, as a
+  closed-form function of (gradient size, worker count, dtype, sketch
+  bins) and as the human-readable formula printed in the README table;
+- whether the strategy computes the exact paper estimator or the
+  histogram-sketch / median-of-medians approximation;
+- the highest attack access level the strategy can *simulate* (the
+  chunked/psum path never materializes per-worker rows, so omniscient
+  attacks structurally cannot run there — see repro.attacks.base).
+
+:class:`CommBudget` accumulates rounds against a spec, giving the
+"total communicated bytes" axis every communication-efficiency sweep
+plots: ``bytes(total) = bytes_per_round(strategy) x rounds``.  Byte
+counts are per device and count collective payload only (receive side
+of gathers, send+receive of all_to_all pairs rounded to the README's
+established approximations) — they are an accounting model for
+comparing strategies, not a wire-level measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.attacks import base as attack_base
+
+BytesFn = Callable[[int, int, int, int], int]  # (num_params, m, dtype_bytes, nbins)
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    """One collective strategy's communication/capability contract.
+
+    ``bytes_fn(num_params, m, dtype_bytes, nbins)`` returns the
+    per-device collective bytes of one aggregation round;
+    ``bytes_formula`` is the same cost as the human-readable formula the
+    generated README table prints.  ``max_access`` is the highest
+    repro.attacks access level the strategy can reproduce (attacks above
+    it are rejected at build time — :func:`validate_attack_strategy`).
+    """
+
+    name: str
+    exact: bool
+    max_access: str  # highest attack access level the strategy supports
+    bytes_formula: str  # human-readable per-device bytes per round
+    bytes_fn: BytesFn
+    summary: str = ""
+
+    def __post_init__(self):
+        attack_base.access_rank(self.max_access)  # validate
+
+    def bytes_per_round(self, num_params: int, m: int,
+                        dtype_bytes: int = 4, nbins: int = 256) -> int:
+        return int(self.bytes_fn(num_params, m, dtype_bytes, nbins))
+
+
+_STRATEGIES: Dict[str, StrategySpec] = {}
+
+
+def register_strategy(spec: StrategySpec) -> StrategySpec:
+    if spec.name in _STRATEGIES:
+        raise ValueError(f"strategy {spec.name!r} already registered")
+    _STRATEGIES[spec.name] = spec
+    return spec
+
+
+def get_strategy_spec(name: str) -> StrategySpec:
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; registered: "
+            f"{', '.join(registered_strategies())}") from None
+
+
+def registered_strategies() -> Tuple[str, ...]:
+    """Registered strategy names, registration order (== docs-table order)."""
+    return tuple(_STRATEGIES)
+
+
+def _hier_split(m: int) -> Tuple[int, int]:
+    """Balanced (pods, workers-per-pod) factorization used for the
+    hierarchical byte model (the real split is the mesh's)."""
+    inner = max(1, int(math.isqrt(m)))
+    while m % inner:
+        inner -= 1
+    return m // inner, inner
+
+
+register_strategy(StrategySpec(
+    "gather", exact=True, max_access=attack_base.OMNISCIENT,
+    bytes_formula="m·|g|",
+    bytes_fn=lambda d, m, b, nbins: m * d * b,
+    summary="paper-faithful: all-gather every per-worker gradient",
+))
+register_strategy(StrategySpec(
+    "bucketed", exact=True, max_access=attack_base.OMNISCIENT,
+    bytes_formula="≈2·|g|",
+    bytes_fn=lambda d, m, b, nbins: 2 * d * b,
+    summary="all_to_all buckets + all_gather — robustness at all-reduce cost",
+))
+register_strategy(StrategySpec(
+    "rs", exact=True, max_access=attack_base.OMNISCIENT,
+    bytes_formula="≈|g|",
+    bytes_fn=lambda d, m, b, nbins: d * b,
+    summary="robust reduce-scatter (result stays sharded; fsdp backward)",
+))
+register_strategy(StrategySpec(
+    "hierarchical", exact=False, max_access=attack_base.OMNISCIENT,
+    bytes_formula="(m_pod + m_dcn)·|g|",
+    bytes_fn=lambda d, m, b, nbins: sum(_hier_split(m)) * d * b,
+    summary="median-of-medians across pods (different estimator — DESIGN.md)",
+))
+register_strategy(StrategySpec(
+    "chunked", exact=False, max_access=attack_base.STATS,
+    bytes_formula="≈(2 + 2·nbins)·|g| — independent of m",
+    bytes_fn=lambda d, m, b, nbins: (2 + 2 * nbins) * d * b,
+    summary="histogram sketch via psum; no per-worker rows ever gathered",
+))
+
+
+def validate_attack_strategy(attack, strategy: str) -> None:
+    """Build-time check: the attack's declared gradient-access level must
+    be reproducible by the collective strategy.
+
+    ``attack`` is an AttackConfig (core.attacks shim), a registered
+    attack name, an Attack spec, or None.  Raises ValueError for e.g. an
+    omniscient attack (mimic, max_damage_tm) on the chunked/psum
+    strategy, which never materializes the per-worker rows the attack
+    needs — failing here, at build time, beats silently simulating a
+    weaker adversary than the one requested.
+    """
+    spec = get_strategy_spec(strategy)
+    atk = resolve_attack(attack)[0]
+    if atk is None:
+        return
+    if attack_base.access_rank(atk.access) > attack_base.access_rank(spec.max_access):
+        able = [s for s in registered_strategies()
+                if attack_base.access_rank(get_strategy_spec(s).max_access)
+                >= attack_base.access_rank(atk.access)]
+        raise ValueError(
+            f"attack {atk.name!r} needs {atk.access!r} gradient access, but "
+            f"strategy {strategy!r} only reproduces up to {spec.max_access!r} "
+            f"(it never materializes what the attack reads); use one of {able}")
+
+
+def resolve_attack(attack) -> Tuple[Optional[object], Optional[float], Optional[float]]:
+    """Normalize an attack argument to ``(Attack spec, alpha, strength)``.
+
+    Accepts None, a registered name (alpha stays None — caller supplies),
+    an Attack spec, or an AttackConfig shim instance (the common case:
+    its ``resolve()`` maps the legacy scale/shift fields onto the
+    engine's strength knob).  ``(None, None, None)`` means "no attack".
+    """
+    if attack is None:
+        return None, None, None
+    from repro.attacks import engine  # local import: keep comm import-light
+
+    if isinstance(attack, str):
+        if attack == "none":
+            return None, None, None
+        spec = engine.as_attack(attack)
+        return spec, None, spec.strength
+    if isinstance(attack, attack_base.Attack):
+        return attack, None, attack.strength
+    # AttackConfig shim (duck-typed: anything with .resolve() and .alpha)
+    spec, strength = attack.resolve()
+    if spec is None or attack.alpha == 0.0:
+        return None, None, None
+    return spec, attack.alpha, strength
+
+
+def resolve_attack_checked(attack):
+    """:func:`resolve_attack` + the shared contract of the round
+    programs: a non-None attack must carry a Byzantine fraction.  Bare
+    registered names and Attack specs have none — silently running clean
+    while reporting an attack name would be a measurement trap, so they
+    are rejected here (pass an AttackConfig; its ``alpha`` sets the cut).
+    """
+    spec, alpha, strength = resolve_attack(attack)
+    if spec is not None and alpha is None:
+        raise ValueError(
+            f"attack {spec.name!r} given without a Byzantine fraction; pass an "
+            "AttackConfig (its alpha field sets the Byzantine cut)")
+    return spec, alpha, strength
+
+
+@dataclasses.dataclass
+class CommBudget:
+    """Accumulating bytes-communicated account for one training run.
+
+    One instance per (strategy, model) pair: ``charge()`` each
+    aggregation round, read ``total_bytes`` at the end.  ``report()``
+    returns the JSON-ready record the comm-efficiency benchmark emits.
+    """
+
+    strategy: str
+    num_params: int
+    m: int
+    dtype_bytes: int = 4
+    nbins: int = 256
+    rounds: int = 0
+
+    def spec(self) -> StrategySpec:
+        return get_strategy_spec(self.strategy)
+
+    @property
+    def bytes_per_round(self) -> int:
+        return self.spec().bytes_per_round(
+            self.num_params, self.m, self.dtype_bytes, self.nbins)
+
+    def charge(self, rounds: int = 1) -> None:
+        if rounds < 0:
+            raise ValueError(f"cannot charge {rounds} rounds")
+        self.rounds += rounds
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_per_round * self.rounds
+
+    def report(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "num_params": self.num_params,
+            "m": self.m,
+            "dtype_bytes": self.dtype_bytes,
+            "nbins": self.nbins,
+            "rounds": self.rounds,
+            "bytes_per_round": self.bytes_per_round,
+            "total_bytes": self.total_bytes,
+            "bytes_formula": self.spec().bytes_formula,
+        }

@@ -1,0 +1,232 @@
+"""Robust local-update GD: τ local steps per communication round.
+
+The τ-interpolation between the paper's two algorithms (Zhou et al.
+2021, *Communication-efficient Byzantine-robust distributed learning
+with statistical guarantee*):
+
+- τ = 1  is exactly Algorithm 1 (robust distributed GD): every worker
+  takes one local gradient step and the robust aggregate of those
+  gradients drives the shared iterate.  ``local_update_gd`` with
+  ``tau=1`` is **bit-for-bit** ``core.robust_gd.robust_gd`` (pinned by
+  tests/test_rounds.py) — same vmap layout, same per-iteration attack
+  keys, same aggregate carry.
+- τ = ∞  is Algorithm 2 (one-round): workers descend to their local
+  minimizers and communicate once.  Because coordinate-wise aggregators
+  are translation-equivariant and odd (agg(c − η·Δ) = c − η·agg(Δ)),
+  aggregating the *accumulated local gradients* Δ_i = Σ_k g_i(w_i^k) is
+  mathematically identical to aggregating the local models w_i^τ — so
+  one run of ``local_update_gd`` with one round and large τ IS the
+  one-round estimator started from w₀ (also pinned by the tests).
+
+Each round every worker runs τ full-batch GD steps from the shared
+iterate on its own shard and transmits Δ_i (its accumulated local
+gradient — the model delta divided by the local learning rate, kept as
+a running sum so τ = 1 stays bit-exact); the server applies
+
+    w ← Π_W ( w − η · agg(Δ₁ … Δ_m) ).
+
+Byzantine workers corrupt the *transmitted* Δ rows — the same
+repro.attacks registry payloads as everywhere else, with per-round PRNG
+keys (randomized attacks), the previous round's broadcast aggregate
+(adaptive attacks, e.g. ``stale``), and per-round greedy scheduling via
+:func:`run_local_update_rounds` (the Chen et al. 2017 adaptive
+adversary, reusing fed.rounds.AttackMixture).
+
+Communication: one robust aggregation per ROUND instead of per local
+step — τ× fewer collective rounds for the same local-step budget, the
+trade benchmarks/comm_efficiency.py measures in bytes (CommBudget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.attacks import engine
+from repro.core import aggregators
+from repro.core.robust_gd import _project
+from repro.rounds import comm
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalUpdateConfig:
+    """Round/aggregation knobs of robust local-update GD.
+
+    ``tau`` is the number of local GD steps between robust aggregations
+    (τ = 1 ≡ Algorithm 1); ``step_size`` is BOTH the local learning rate
+    and the server scale on the aggregated delta, so the τ → ∞ limit of
+    one round is exactly the one-round estimator (module docstring).
+    """
+
+    method: str = "median"  # mean|median|trimmed_mean (any registered name)
+    beta: float = 0.1
+    step_size: float = 0.1  # η: local lr AND server scale on agg(Δ)
+    tau: int = 1  # local steps per communication round
+    num_rounds: int = 100  # R communication rounds
+    projection_radius: Optional[float] = None  # Π_W: l2 ball (None = R^d)
+
+
+def _round_deltas(grads_shared, grads_local, w, worker_data, tau: int, eta):
+    """The τ local steps of one round: stacked accumulated local
+    gradients Δᵢ = Σₖ gᵢ(wᵢᵏ), leaves (m, ...).
+
+    The first local gradient is computed at the SHARED iterate with the
+    exact robust_gd vmap layout (in_axes=(None, 0)) — what makes τ = 1
+    bit-identical to Algorithm 1; subsequent steps carry per-worker
+    iterates (in_axes=(0, 0)).
+    """
+    g0 = grads_shared(w, worker_data)
+    if tau == 1:
+        return g0
+    ws0 = jax.tree.map(lambda p, g: jnp.broadcast_to(p, g.shape) - eta * g,
+                       w, g0)
+
+    def local_step(c, _):
+        ws, acc = c
+        g = grads_local(ws, worker_data)
+        return (jax.tree.map(lambda a, b: a - eta * b, ws, g),
+                jax.tree.map(jnp.add, acc, g)), None
+
+    (_, deltas), _ = jax.lax.scan(local_step, (ws0, g0), None, length=tau - 1)
+    return deltas
+
+
+def _attack_deltas(deltas, prev_d, spec, alpha, strength, m: int, r):
+    """Replace Byzantine Δ rows; ``r`` (round index, may be traced) folds
+    the PRNG key and feeds ctx.round; ``prev_d`` feeds adaptive attacks."""
+    mask = engine.byzantine_mask(alpha, m)
+    k = jax.random.fold_in(jax.random.PRNGKey(0), r)
+    return jax.tree.map(
+        lambda dd, p: engine.apply_to_rows(
+            spec, dd, mask, alpha=alpha, strength=strength, key=k,
+            prev_agg=p, rnd=r),
+        deltas, prev_d)
+
+
+def local_update_gd(
+    loss_fn: Callable,  # loss_fn(w, batch) -> scalar; batch leaves (n, ...)
+    w0,
+    worker_data,  # pytree with leaves (m, n, ...): worker-sharded dataset
+    cfg: LocalUpdateConfig,
+    attack=None,  # AttackConfig | None (bare names/Attack specs rejected)
+    trajectory_fn: Optional[Callable] = None,
+):
+    """Run robust local-update GD; returns (w_R, per-round metrics).
+
+    Single-host reference (vmap over the worker axis), mirroring
+    ``robust_gd`` exactly at τ = 1.  ``trajectory_fn(w) -> scalar`` is
+    evaluated once per ROUND (e.g. ‖w − w*‖₂) and stacked into the
+    returned metrics, so curves are per-communication-round — the x-axis
+    the comm-efficiency benchmark converts to bytes.
+    """
+    if cfg.tau < 1:
+        raise ValueError(f"tau must be >= 1, got {cfg.tau}")
+    m = jax.tree.leaves(worker_data)[0].shape[0]
+    grad_fn = jax.grad(loss_fn)
+    grads_shared = jax.vmap(grad_fn, in_axes=(None, 0))
+    grads_local = jax.vmap(grad_fn, in_axes=(0, 0))
+    agg = aggregators.get_aggregator(cfg.method, cfg.beta)
+    spec, alpha, strength = comm.resolve_attack_checked(attack)
+    attacking = spec is not None and alpha > 0
+    eta = cfg.step_size
+
+    def round_step(carry, r):
+        # prev_d — the previous round's broadcast aggregate — threads
+        # through the scan for ADAPTIVE attacks (ctx.prev_agg readers);
+        # per-round keys drive randomized ones.  Identical structure to
+        # robust_gd's per-iteration carry.
+        w, prev_d = carry
+        deltas = _round_deltas(grads_shared, grads_local, w, worker_data,
+                               cfg.tau, eta)
+        if attacking:
+            deltas = _attack_deltas(deltas, prev_d, spec, alpha, strength, m, r)
+        d_agg = jax.tree.map(agg, deltas)
+        w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
+        w_new = _project(w_new, cfg.projection_radius)
+        metric = trajectory_fn(w_new) if trajectory_fn is not None else jnp.float32(0)
+        return (w_new, d_agg), metric
+
+    prev0 = jax.tree.map(jnp.zeros_like, w0)
+    (w_final, _), metrics = jax.lax.scan(
+        round_step, (w0, prev0), jnp.arange(cfg.num_rounds))
+    return w_final, metrics
+
+
+def run_local_update_rounds(
+    loss_fn: Callable,
+    w0,
+    worker_data,
+    cfg: LocalUpdateConfig,
+    mixture=None,  # fed.rounds.AttackMixture (None = clean)
+    trajectory_fn: Optional[Callable] = None,
+):
+    """Round loop with a per-round attack SCHEDULE; returns (w, history).
+
+    The adaptive-adversary driver: each communication round the mixture
+    picks the attack (``cycle``/``fixed``/``greedy`` — the greedy
+    scheduler explores candidates and replays whichever damaged the
+    defence most, fed round loop semantics), then one ``local_update_gd``
+    round executes with the previous round's aggregate carried in.
+    ``history[r]`` records {"round", "attack", "tau", "delta_norm",
+    "metric"} with ``metric = trajectory_fn(w_r)`` (0 when None); the
+    greedy scheduler's damage signal is the metric drift (or the
+    aggregate-norm drift when no trajectory_fn is given).
+    """
+    scheduler = mixture.make_scheduler() if mixture is not None else None
+    m = jax.tree.leaves(worker_data)[0].shape[0]
+    grad_fn = jax.grad(loss_fn)
+    grads_shared = jax.vmap(grad_fn, in_axes=(None, 0))
+    grads_local = jax.vmap(grad_fn, in_axes=(0, 0))
+    agg = aggregators.get_aggregator(cfg.method, cfg.beta)
+    eta = cfg.step_size
+    # one jitted round body per DISTINCT attack spec (the scan version
+    # can't switch payload formulas across rounds; re-tracing per round
+    # would pay cfg.num_rounds compilations) — same round body as
+    # local_update_gd (shared helpers), incl. the no-Byzantine-fraction
+    # ValueError from resolve_attack_checked
+    round_fns: dict = {}
+
+    def get_round_fn(attack):
+        spec, alpha, strength = comm.resolve_attack_checked(attack)
+        key = (None if spec is None else spec.name, alpha, strength)
+        if key not in round_fns:
+            @jax.jit
+            def round_fn(w, prev_d, r):
+                deltas = _round_deltas(grads_shared, grads_local, w,
+                                       worker_data, cfg.tau, eta)
+                if spec is not None and alpha > 0:
+                    deltas = _attack_deltas(deltas, prev_d, spec, alpha,
+                                            strength, m, r)
+                d_agg = jax.tree.map(agg, deltas)
+                w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
+                return _project(w_new, cfg.projection_radius), d_agg
+
+            round_fns[key] = round_fn
+        return round_fns[key]
+
+    w = w0
+    history = []
+    prev_metric = float(trajectory_fn(w)) if trajectory_fn is not None else 0.0
+    prev_d = jax.tree.map(jnp.zeros_like, w0)
+    for r in range(cfg.num_rounds):
+        attack = mixture.for_round(r, scheduler) if mixture is not None else None
+        w, d_agg = get_round_fn(attack)(w, prev_d, jnp.int32(r))
+        metric = float(trajectory_fn(w)) if trajectory_fn is not None else 0.0
+        d_norm = float(jnp.linalg.norm(
+            jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(d_agg)])))
+        if scheduler is not None:
+            # adversary reward: observable drift the broadcast state reveals
+            damage = (metric - prev_metric) if trajectory_fn is not None else d_norm
+            scheduler.feedback(r, damage)
+        prev_metric = metric
+        prev_d = d_agg
+        history.append({
+            "round": r,
+            "attack": attack.name if attack is not None else "none",
+            "tau": cfg.tau,
+            "delta_norm": d_norm,
+            "metric": metric,
+        })
+    return w, history

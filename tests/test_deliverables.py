@@ -51,15 +51,64 @@ def test_dryrun_records_roofline_fields():
 
 def test_docs_exist_and_reference_sections():
     for name, needles in {
-        "DESIGN.md": ["Arch-applicability", "Pallas kernel", "robust reduce-scatter"],
-        "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis"],
-        "README.md": ["bucketed", "fsdp"],
+        "DESIGN.md": ["Arch-applicability", "Pallas kernel", "robust reduce-scatter",
+                      "Communication rounds"],
+        "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis",
+                           "§Communication"],
+        "README.md": ["bucketed", "fsdp", "Communication efficiency",
+                      "one_round_rate"],
     }.items():
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), name
         text = open(path).read()
         for needle in needles:
             assert needle in text, (name, needle)
+
+
+def _readme_block(name: str) -> str:
+    from repro import docs
+
+    text = open(os.path.join(ROOT, "README.md")).read()
+    begin = docs.BEGIN.format(name=name)
+    end = docs.END.format(name=name)
+    assert begin in text and end in text, f"README missing {name} markers"
+    return text.split(begin, 1)[1].split(end, 1)[0]
+
+
+def test_readme_attack_table_covers_registry():
+    """Every registered attack must appear in the generated README attack
+    table (the registry-generated docs contract)."""
+    from repro import attacks
+
+    block = _readme_block("attacks")
+    for name in attacks.registered():
+        assert f"`{name}`" in block, f"attack {name!r} missing from README table"
+
+
+def test_readme_aggregator_table_covers_registry():
+    """Every get_aggregator-registered name must appear in the generated
+    README aggregator table."""
+    from repro.core import aggregators
+
+    block = _readme_block("aggregators")
+    for name in aggregators.registered_aggregators():
+        assert f"`{name}`" in block, f"aggregator {name!r} missing from README table"
+
+
+def test_readme_strategy_table_covers_registry():
+    from repro.rounds import comm
+
+    block = _readme_block("strategies")
+    for name in comm.registered_strategies():
+        assert f"`{name}`" in block, f"strategy {name!r} missing from README table"
+
+
+def test_generated_docs_no_drift():
+    """Regenerating the README tables must be a no-op (idempotent against
+    the registries) — the same check scripts/ci.sh docs gates on."""
+    from repro import docs
+
+    assert docs.check(os.path.join(ROOT, "README.md")) == []
 
 
 def test_examples_exist():

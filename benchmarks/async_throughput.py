@@ -1,0 +1,263 @@
+"""Buffered-async throughput grid: rounds/time and ‖ŵ−w*‖ vs buffer
+fraction k/m and dropout rate.
+
+Runs the buffered engine (fed/async_rounds.py) on the federated
+Proposition-1 population under a HEAVY-TAILED (lognormal) latency
+distribution — the regime where waiting for the full cohort is
+straggler-bound — across (attack × k/m × dropout).  The k/m = 1.0
+column IS the synchronous engine under the same latency draw (the
+buffer waits for everyone; under dropout it waits for ``TIMEOUT``), so
+speedups are computed against a baseline that shares every other knob.
+
+Time is SIMULATED: a round costs the k-th arrival time (async) or the
+max/timeout (sync column) from the seeded arrival model, so the metric
+is deterministic and CI-stable — no wall-clock noise.  Two gate
+families (CI: part of ``scripts/ci.sh bench``; committed grid is
+BENCH_async.json, diffed by scripts/bench_diff.py):
+
+- **theory**: every cell's final error must stay within the effective-m
+  statistical rate (core/theory.delta_median_async — eq. 3 evaluated at
+  the buffer's concentrated alpha_eff and honest-in-buffer m_eff), with
+  a calibrated constant; cells whose alpha_eff crosses the breakdown
+  point are reported ungated.
+- **speedup**: at k/m = 0.5 with no dropout, the buffered engine must
+  close rounds >= ``SPEEDUP_FLOOR``x faster (simulated time) than the
+  k = m sync column while the final error stays within
+  ``ERR_RATIO_CEILING``x of it — the ISSUE's matched-final-error
+  acceptance bar.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.async_throughput --smoke --json BENCH_async.json
+
+exits non-zero iff any gated cell or speedup gate fails.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Tuple
+
+from repro.core import theory
+from repro.core.attacks import AttackConfig
+from repro.fed.async_rounds import AsyncConfig, run_async_rounds
+from repro.fed.population import ArrivalConfig, ClientPopulation, PopulationConfig
+from repro.fed.rounds import AttackMixture, RoundConfig
+
+# Theory-gate calibration, ROBUSTNESS.json style: healthy runs pass with
+# >= ~3x margin (worst observed ratio ~0.3 at seed 0 across the
+# committed grid) while a broken aggregator fails by orders of
+# magnitude.  Same role as matrix.K_MEDIAN, re-calibrated for the
+# federated population's noise scale and finite round budget.
+K_ASYNC = 1.5
+
+# The acceptance bar: >= 2x faster rounds at half-buffer under heavy
+# tails, at matched final error.  The error ceiling is generous on
+# purpose — halving the averaging population costs at most ~sqrt(2) in
+# the clean statistical rate, and the gate must not flake on seeds.
+SPEEDUP_FLOOR = 2.0
+ERR_RATIO_CEILING = 1.5
+
+# Sync column's straggler bound under dropout: a synchronous round can
+# only close on a no-show via timeout.  ~ the far lognormal tail of a
+# cohort-sized draw at spread 1.
+TIMEOUT = 20.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncBenchConfig:
+    clients: int = 2000
+    cohort: int = 64  # m: arrivals competing for the buffer each round
+    n: int = 32  # samples per client
+    d: int = 32
+    alpha: float = 0.1  # Byzantine fraction (attacked cells)
+    noise: float = 0.5
+    attacks: Tuple[str, ...] = ("none", "stale_exploit")
+    k_fracs: Tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+    dropouts: Tuple[float, ...] = (0.0, 0.25)
+    latency: str = "lognormal"
+    latency_spread: float = 1.0
+    policy: str = "damped"
+    method: str = "median"
+    beta: float = 0.3
+    chunk_clients: int = 16
+    rounds: int = 30
+    lr: float = 0.3
+    seed: int = 0
+
+    def __post_init__(self):
+        if 1.0 not in self.k_fracs:
+            raise ValueError("k_fracs must include 1.0 (the sync baseline)")
+
+
+SMOKE = AsyncBenchConfig(clients=400, cohort=32, d=16, rounds=12,
+                         k_fracs=(0.5, 1.0))
+
+
+def _run_cell(pop: ClientPopulation, cfg: AsyncBenchConfig, attack: str,
+              k: int, dropout: float):
+    rcfg = RoundConfig(
+        num_rounds=cfg.rounds, cohort_size=cfg.cohort,
+        chunk_clients=cfg.chunk_clients, method=cfg.method, beta=cfg.beta,
+        lr=cfg.lr, seed=cfg.seed)
+    mixture = AttackMixture(
+        () if attack == "none"
+        else (AttackConfig(name=attack, alpha=cfg.alpha),))
+    acfg = AsyncConfig(buffer_k=k, policy=cfg.policy, timeout=TIMEOUT)
+    arr = ArrivalConfig(latency=cfg.latency, spread=cfg.latency_spread,
+                        dropout=dropout)
+    _, history = run_async_rounds(pop, rcfg, acfg, arr, mixture)
+    total_time = sum(h["duration"] for h in history)
+    return {
+        "err": history[-1]["err"],
+        "total_time": total_time,
+        "rounds_per_unit": (cfg.rounds / total_time if total_time > 0
+                            else float("inf")),
+        "buffer_mean": sum(h["buffer"] for h in history) / len(history),
+        "staleness_mean": sum(h["staleness_mean"] for h in history) / len(history),
+        "pending_max": max(h["pending"] for h in history),
+    }
+
+
+def evaluate(cfg: AsyncBenchConfig = AsyncBenchConfig(),
+             verbose: bool = False) -> dict:
+    """Run the (attack x k/m x dropout) grid; returns the JSON payload."""
+    pop = ClientPopulation(PopulationConfig(
+        num_clients=cfg.clients, samples_per_client=cfg.n, dim=cfg.d,
+        alpha=cfg.alpha, noise=cfg.noise, seed=cfg.seed))
+    runs = {}
+    for attack in cfg.attacks:
+        for k_frac in cfg.k_fracs:
+            k = max(1, int(round(k_frac * cfg.cohort)))
+            for dropout in cfg.dropouts:
+                runs[(attack, k_frac, dropout)] = _run_cell(
+                    pop, cfg, attack, k, dropout)
+
+    records, gates = [], []
+    for attack in cfg.attacks:
+        alpha = cfg.alpha if attack != "none" else 0.0
+        for k_frac in cfg.k_fracs:
+            k = max(1, int(round(k_frac * cfg.cohort)))
+            for dropout in cfg.dropouts:
+                cell = runs[(attack, k_frac, dropout)]
+                sync = runs[(attack, 1.0, dropout)]
+                k_act, alpha_eff = theory.effective_buffer(
+                    alpha, cfg.cohort, k, dropout)
+                bound = (None if alpha_eff >= 0.5 else
+                         K_ASYNC * theory.delta_median_async(
+                             alpha, cfg.n, cfg.cohort, k, cfg.d,
+                             V=cfg.noise, S=3.0, dropout=dropout))
+                records.append({
+                    "attack": attack, "alpha": alpha, "k": k,
+                    "k_frac": k_frac, "dropout": dropout,
+                    "k_actual": k_act, "alpha_eff": alpha_eff,
+                    **cell,
+                    "bound": bound, "gated": bound is not None,
+                    "ok": bound is None or cell["err"] <= bound,
+                    "speedup_vs_sync": (sync["total_time"] / cell["total_time"]
+                                        if cell["total_time"] > 0 else None),
+                    "err_ratio_vs_sync": (cell["err"] / sync["err"]
+                                          if sync["err"] > 0 else None),
+                })
+        # the acceptance gate: half-buffer, no dropout.  The speedup
+        # floor binds every attack; the matched-error ratio binds the
+        # CLEAN cell only — under attack the half buffer legitimately
+        # concentrates alpha_eff to ~2*alpha, so attacked error is held
+        # to the effective-m theory bound (per-record gate above), not
+        # to the sync run's error (comm_efficiency gates its byte floor
+        # on the one ALIE cell the same way).
+        if 0.5 in cfg.k_fracs and 0.0 in cfg.dropouts:
+            cell = runs[(attack, 0.5, 0.0)]
+            sync = runs[(attack, 1.0, 0.0)]
+            speedup = sync["total_time"] / cell["total_time"]
+            err_ratio = cell["err"] / sync["err"] if sync["err"] > 0 else None
+            ratio_binds = attack == "none"
+            gates.append({
+                "attack": attack, "k_frac": 0.5, "dropout": 0.0,
+                "speedup": speedup, "floor": SPEEDUP_FLOOR,
+                "err_ratio": err_ratio, "err_ratio_ceiling": ERR_RATIO_CEILING,
+                "err_ratio_gated": ratio_binds,
+                "ok": speedup >= SPEEDUP_FLOOR and (
+                    not ratio_binds or (err_ratio is not None
+                                        and err_ratio <= ERR_RATIO_CEILING)),
+            })
+    violations = [r for r in records if not r["ok"]]
+    failed_gates = [g for g in gates if not g["ok"]]
+    out = {
+        "suite": "async",
+        "task": "fed-linreg-buffered",
+        "config": dataclasses.asdict(cfg),
+        "records": records,
+        "speedup_gates": gates,
+        "violations": violations,
+        "failed_gates": failed_gates,
+    }
+    if verbose:
+        for r in records:
+            gate = ("VIOLATION" if not r["ok"] else
+                    f"<= {r['bound']:.3f}" if r["gated"] else "ungated")
+            sp = r["speedup_vs_sync"]
+            print(f"  {r['attack']:14s} k/m={r['k_frac']:.2f} "
+                  f"drop={r['dropout']:.2f} err={r['err']:8.4f} "
+                  f"t={r['total_time']:7.2f} "
+                  f"speedup={sp if sp is None else round(sp, 2)}x [{gate}]")
+        for g in gates:
+            print(f"  speedup gate [{g['attack']:14s}]: "
+                  f"{g['speedup']:.2f}x (floor {g['floor']}x), "
+                  f"err ratio {g['err_ratio']:.2f} "
+                  f"(ceiling {g['err_ratio_ceiling']}x) "
+                  f"{'ok' if g['ok'] else 'FAILED'}")
+    return out
+
+
+def run(verbose: bool = True, smoke: bool = False):
+    """benchmarks.run harness entry: raises on any gate failure."""
+    out = evaluate(SMOKE if smoke else AsyncBenchConfig(), verbose=verbose)
+    if out["violations"] or out["failed_gates"]:
+        raise AssertionError(
+            f"async-throughput gates failed: {len(out['violations'])} theory "
+            f"violations, {len(out['failed_gates'])} speedup failures")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.async_throughput",
+        description="buffered-async throughput grid: attack x k/m x "
+                    "dropout, effective-m- and speedup-gated")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (smaller cohort, fewer cells)")
+    ap.add_argument("--json", nargs="?", const="BENCH_async.json",
+                    default=None, metavar="PATH",
+                    help="write the machine-readable grid "
+                    "(default BENCH_async.json)")
+    ap.add_argument("--seed", type=int, default=None)
+    args = ap.parse_args(argv)
+    cfg = SMOKE if args.smoke else AsyncBenchConfig()
+    if args.seed is not None:
+        cfg = dataclasses.replace(cfg, seed=args.seed)
+    out = evaluate(cfg, verbose=True)
+    out["smoke"] = args.smoke
+    if args.json is not None:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.json} ({len(out['records'])} records)",
+              file=sys.stderr)
+    rc = 0
+    for c in out["violations"]:
+        print(f"GATE async/theory: {c['attack']} k/m={c['k_frac']} "
+              f"drop={c['dropout']}: err {c['err']:.4f} > bound "
+              f"{c['bound']:.4f}", file=sys.stderr)
+        rc = 1
+    for g in out["failed_gates"]:
+        print(f"GATE async/speedup: {g['attack']}: {g['speedup']:.2f}x < "
+              f"{g['floor']}x or err ratio {g['err_ratio']} > "
+              f"{g['err_ratio_ceiling']}x", file=sys.stderr)
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,13 @@ benchmarks/comm_efficiency.py) to PATH (default BENCH_comm.json); the
 comm suite ALWAYS gates (theory bounds + the ≥4× byte-saving floor
 under ALIE) — its gates are deterministic statistics, not wall-clock
 timings, so there is no noise margin to waive.
+
+``--json-async [PATH]`` writes the buffered-async throughput grid
+(attack × k/m × dropout: error, effective-m theory bound, simulated
+rounds/time — see benchmarks/async_throughput.py) to PATH (default
+BENCH_async.json); like comm, the async suite ALWAYS gates (effective-m
+bounds + the ≥2× half-buffer speedup floor at matched clean error) on
+deterministic simulated time, so there is no noise margin.
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ import json
 import sys
 import traceback
 
-SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg", "comm"]
+SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg",
+          "comm", "async"]
 
 GATE_M = 32  # the gated worker count (the ROADMAP's deployment size)
 # Timing gate with a safety margin: on shared CI runners wall time is
@@ -68,6 +76,10 @@ def main() -> None:
                     default=None, metavar="PATH",
                     help="write the comm-efficiency grid to PATH "
                          "(default BENCH_comm.json)")
+    ap.add_argument("--json-async", nargs="?", const="BENCH_async.json",
+                    default=None, metavar="PATH",
+                    help="write the buffered-async throughput grid to PATH "
+                         "(default BENCH_async.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="shrunken agg sweep for CI wall-clock budgets")
     ap.add_argument("--gate-agg", action="store_true",
@@ -80,6 +92,7 @@ def main() -> None:
     failed = []
     agg_records = None
     comm_payload = None
+    async_payload = None
     for suite in only:
         try:
             if suite == "table2":
@@ -98,6 +111,8 @@ def main() -> None:
                 from benchmarks import agg_microbench as mod
             elif suite == "comm":
                 from benchmarks import comm_efficiency as mod
+            elif suite == "async":
+                from benchmarks import async_throughput as mod
             else:
                 raise ValueError(f"unknown suite {suite}")
             if suite == "agg":
@@ -113,6 +128,17 @@ def main() -> None:
                         f"comm-efficiency gates failed: "
                         f"{len(comm_payload['violations'])} theory violations, "
                         f"{len(comm_payload['failed_gates'])} byte-saving failures")
+            elif suite == "async":
+                # same shape as comm: evaluate once, gate on the payload,
+                # so a violating run still writes --json-async evidence
+                async_payload = mod.evaluate(
+                    mod.SMOKE if args.smoke else mod.AsyncBenchConfig(),
+                    verbose=True)
+                if async_payload["violations"] or async_payload["failed_gates"]:
+                    raise AssertionError(
+                        f"async-throughput gates failed: "
+                        f"{len(async_payload['violations'])} theory violations, "
+                        f"{len(async_payload['failed_gates'])} speedup failures")
             else:
                 mod.run(verbose=True)
         except Exception:  # noqa: BLE001
@@ -133,6 +159,13 @@ def main() -> None:
             json.dump(comm_payload, f, indent=1)
         print(f"wrote {args.json_comm} ({len(comm_payload['records'])} records)",
               file=sys.stderr)
+
+    if args.json_async is not None and async_payload is not None:
+        async_payload = {**async_payload, "smoke": args.smoke}
+        with open(args.json_async, "w") as f:
+            json.dump(async_payload, f, indent=1)
+        print(f"wrote {args.json_async} "
+              f"({len(async_payload['records'])} records)", file=sys.stderr)
 
     if args.gate_agg:
         problems = _gate_agg(agg_records or [])

@@ -2,10 +2,11 @@
 
 Used by the CI bench job to compare fresh runs against the committed
 baselines in the job summary (markdown tables).  Informational only —
-the hard gates stay in benchmarks/run.py (``--gate-agg``) and
-benchmarks/comm_efficiency.py (theory bounds + byte-saving floor); this
-diff makes drift visible per case so a slow regression inside the gate
-margins still shows up in CI history.
+the hard gates stay in benchmarks/run.py (``--gate-agg``),
+benchmarks/comm_efficiency.py (theory bounds + byte-saving floor), and
+benchmarks/async_throughput.py (effective-m bounds + speedup floor);
+this diff makes drift visible per case so a slow regression inside the
+gate margins still shows up in CI history.
 
 Handles both artifact schemas, keyed off the payload's ``suite`` field:
 
@@ -13,7 +14,10 @@ Handles both artifact schemas, keyed off the payload's ``suite`` field:
   vs the XLA-sort baseline (timing, noisy on shared runners);
 - ``comm`` (BENCH_comm.json) — (tau, strategy, attack) cells: final
   error, theory bound, rounds/bytes to the fixed target error
-  (deterministic statistics — any delta is a real behaviour change).
+  (deterministic statistics — any delta is a real behaviour change);
+- ``async`` (BENCH_async.json) — (attack, k/m, dropout) cells: final
+  error + simulated round time and the speedup vs the k = m sync
+  column (also deterministic — the clock is the seeded arrival model).
 
     python scripts/bench_diff.py --base OLD.json --new NEW.json
 """
@@ -85,6 +89,34 @@ def _diff_comm(base: dict, new: dict) -> None:
     _dropped(base, new)
 
 
+def _diff_async(base: dict, new: dict) -> None:
+    def index(payload):
+        return {(r["attack"], r["k_frac"], r["dropout"]): r
+                for r in payload.get("records", [])}
+
+    base, new = index(base), index(new)
+    print("### Buffered-async throughput grid vs committed baseline")
+    print()
+    print("| attack | k/m | dropout | base err | new err | err Δ | "
+          "base speedup | new speedup |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(new):
+        attack, k_frac, dropout = key
+        nr = new[key]
+        br = base.get(key)
+        if br is None:
+            print(f"| {attack} | {k_frac} | {dropout} | — | "
+                  f"{nr['err']:.4f} | new case | — | "
+                  f"{_fmt(nr.get('speedup_vs_sync'), '.2f', 'x')} |")
+            continue
+        derr = nr["err"] - br["err"]
+        print(f"| {attack} | {k_frac} | {dropout} | {br['err']:.4f} | "
+              f"{nr['err']:.4f} | {derr:+.4f} | "
+              f"{_fmt(br.get('speedup_vs_sync'), '.2f', 'x')} | "
+              f"{_fmt(nr.get('speedup_vs_sync'), '.2f', 'x')} |")
+    _dropped(base, new)
+
+
 def _dropped(base: dict, new: dict) -> None:
     dropped = sorted(set(base) - set(new))
     if dropped:
@@ -108,6 +140,8 @@ def main(argv=None) -> int:
         return 2
     if suite == "comm":
         _diff_comm(base, new)
+    elif suite == "async":
+        _diff_async(base, new)
     else:
         _diff_agg(base, new)
     return 0

@@ -3,23 +3,32 @@
 #
 #   scripts/ci.sh             full tier-1 suite
 #   scripts/ci.sh fast        quick subset (-m fast) for per-push feedback
-#   scripts/ci.sh bench       agg micro-bench smoke + comm-efficiency grid:
-#                             writes BENCH_agg.json and BENCH_comm.json and
-#                             FAILS if the pruned selection network is slower
-#                             than 0.7x the XLA-sort median baseline at m=32,
-#                             if any comm cell violates its core/theory.py
-#                             bound, or if tau>=4 local-update rounds save
-#                             less than 4x bytes vs tau=1 under ALIE
+#   scripts/ci.sh bench       agg micro-bench smoke + comm-efficiency grid
+#                             + buffered-async throughput grid: writes
+#                             BENCH_agg.json, BENCH_comm.json and
+#                             BENCH_async.json and FAILS if the pruned
+#                             selection network is slower than 0.7x the
+#                             XLA-sort median baseline at m=32, if any
+#                             comm cell violates its core/theory.py
+#                             bound, if tau>=4 local-update rounds save
+#                             less than 4x bytes vs tau=1 under ALIE, if
+#                             any async cell breaks its effective-m
+#                             bound, or if the k/m=0.5 buffer closes
+#                             rounds < 2x faster than sync under
+#                             heavy-tailed latency at matched clean error
 #   scripts/ci.sh docs        registry-generated README tables
 #                             (python -m repro.docs --check): FAILS if the
 #                             attack/aggregator/strategy tables drifted from
 #                             the registries (regenerate: python -m repro.docs)
 #   scripts/ci.sh robustness  attack x aggregator x alpha scenario matrix
+#                             plus the buffered-async stale-exploit cells
 #                             (repro.attacks.matrix --smoke): writes
 #                             ROBUSTNESS.smoke.json (the committed
 #                             ROBUSTNESS.json is the full grid — don't
 #                             clobber it) and FAILS if any gated cell's
-#                             final error violates its core/theory.py bound
+#                             final error violates its core/theory.py
+#                             bound (sync rate, or the effective-m async
+#                             rate for buffered cells)
 #   scripts/ci.sh lint        ruff check (F + E9 repo-wide, pyproject.toml)
 #                             + ruff format check on scripts/ — requires
 #                             ruff on PATH; the GitHub lint job installs it
@@ -38,11 +47,13 @@ if [ "${1:-}" = "fast" ]; then
     exec python -m pytest -q -m fast
 fi
 if [ "${1:-}" = "bench" ]; then
-    # agg timings are --smoke (wall-clock budget); the comm grid is fast
-    # and deterministic, so it runs its committed full config for clean
-    # per-cell diffs against the BENCH_comm.json baseline
+    # agg timings are --smoke (wall-clock budget); the comm and async
+    # grids are deterministic statistics, so they run their committed
+    # full configs for clean per-cell diffs against the BENCH_comm.json
+    # and BENCH_async.json baselines
     python -m benchmarks.run --only agg --json BENCH_agg.json --smoke --gate-agg || exit 1
-    exec python -m benchmarks.run --only comm --json-comm BENCH_comm.json
+    python -m benchmarks.run --only comm --json-comm BENCH_comm.json || exit 1
+    exec python -m benchmarks.run --only async --json-async BENCH_async.json
 fi
 if [ "${1:-}" = "docs" ]; then
     exec python -m repro.docs --check

@@ -39,6 +39,17 @@ STATS = "stats"
 OMNISCIENT = "omniscient"
 ACCESS_LEVELS = (DATA, LOCAL, STATS, OMNISCIENT)
 
+# Arrival-timing behaviours an attack may declare for buffered async
+# rounds (fed/async_rounds.py).  Timing is a *scheduling* capability,
+# orthogonal to gradient access: a local-access attack can still control
+# WHEN its machines report.  ``first`` rushes the buffer window (all
+# Byzantine arrivals land before any honest one), ``last`` lags into the
+# buffer tail (maximally stale while still aggregated), ``greedy``
+# explores the modes and replays the most damaging one
+# (attacks/schedule.ArrivalScheduler).  Synchronous engines ignore the
+# declaration — every round closes on the full cohort anyway.
+ARRIVAL_BEHAVIOURS = ("first", "last", "greedy")
+
 
 def access_rank(access: str) -> int:
     if access not in ACCESS_LEVELS:
@@ -63,6 +74,18 @@ class AttackContext:
     # public state — visible at EVERY access level (the aggregate is
     # broadcast back to all workers each round):
     prev_agg: Optional[jax.Array] = None  # previous round's aggregate
+    # stack of past broadcast aggregates, newest first: agg_history[0] is
+    # the previous round's aggregate (== prev_agg).  Engines that keep a
+    # deeper broadcast history (fed/async_rounds.py) pass it here; the
+    # synchronous engines fall back to a depth-1 history built from
+    # prev_agg (engine.build_context), so stale-replay attacks degrade
+    # gracefully to the echo-previous-round behaviour.
+    agg_history: Optional[jax.Array] = None  # (H, ...) past aggregates
+    # how many broadcasts ago this Byzantine worker's view of the server
+    # state is: 1 = it saw the previous round's aggregate (the sync
+    # default), s+1 for a worker whose round-(r-s) report only lands in
+    # the buffer now.  Stale-replay payloads index agg_history with it.
+    staleness: Optional[jax.Array] = None
     round: Optional[jax.Array] = None  # round/iteration index
     key: Optional[jax.Array] = None  # PRNG key (randomized attacks)
     # local and above:
@@ -99,12 +122,21 @@ class Attack:
     randomized: bool = False
     needs_variance: bool = False  # payload reads ctx.honest_var
     reads_own: bool = False  # payload reads ctx.own's VALUES (not just shape)
+    # arrival-timing behaviour for buffered async rounds: None = report
+    # like an honest client; otherwise one of ARRIVAL_BEHAVIOURS.  The
+    # async engine places the Byzantine arrivals accordingly; sync
+    # engines (which wait for everyone) ignore it.
+    arrival: Optional[str] = None
     summary: str = ""
     # data-space attacks: (labels, key, num_classes) -> corrupted labels
     corrupt_labels: Optional[Callable] = None
 
     def __post_init__(self):
         access_rank(self.access)  # validate
+        if self.arrival is not None and self.arrival not in ARRIVAL_BEHAVIOURS:
+            raise ValueError(
+                f"attack {self.name!r}: unknown arrival behaviour "
+                f"{self.arrival!r}; want one of {ARRIVAL_BEHAVIOURS} or None")
         if self.access == DATA:
             if self.corrupt_labels is None:
                 raise ValueError(f"data attack {self.name!r} needs corrupt_labels")

@@ -72,6 +72,8 @@ def build_context(
     honest_var: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
     prev_agg: Optional[jax.Array] = None,
+    agg_history: Optional[jax.Array] = None,
+    staleness=None,
     rnd=None,
 ) -> AttackContext:
     """Assemble a context exposing ONLY what ``attack.access`` grants.
@@ -79,17 +81,33 @@ def build_context(
     Callers hand over everything they have; the filter makes the declared
     access level structurally binding (a stats attack physically cannot
     read rows — the field is ``None`` in its context).
+
+    ``prev_agg`` and ``agg_history`` are two views of the same public
+    broadcast state: engines that track only the previous aggregate pass
+    ``prev_agg`` and get a depth-1 ``agg_history`` derived from it;
+    engines with a real multi-round history (fed/async_rounds.py) pass
+    ``agg_history`` (newest first) and ``prev_agg`` defaults to its head.
+    ``staleness`` defaults to 1 (the sync "I saw last round's broadcast"
+    view) when any history exists.
     """
     rank = access_rank(attack.access)
     if strength is None:
         strength = attack.strength
     if key is None and attack.randomized:
         key = jax.random.PRNGKey(0)
+    if agg_history is None and prev_agg is not None:
+        agg_history = jnp.expand_dims(prev_agg, 0)
+    elif prev_agg is None and agg_history is not None:
+        prev_agg = agg_history[0]
+    if staleness is None and agg_history is not None:
+        staleness = 1
     return AttackContext(
         m=m,
         alpha=alpha,
         strength=strength,
         prev_agg=prev_agg,
+        agg_history=agg_history,
+        staleness=staleness,
         round=rnd,
         key=key,
         own=own if rank >= access_rank(LOCAL) else None,
@@ -121,6 +139,8 @@ def apply_to_rows(
     strength=None,
     key: Optional[jax.Array] = None,
     prev_agg: Optional[jax.Array] = None,
+    agg_history: Optional[jax.Array] = None,
+    staleness=None,
     rnd=None,
 ) -> jax.Array:
     """Replace Byzantine rows of ``stacked`` ``(m, ...)`` per ``mask``.
@@ -134,13 +154,13 @@ def apply_to_rows(
     m = stacked.shape[0]
     if alpha is None:
         alpha = jnp.sum(mask) / m
-    if prev_agg is None and attack.adaptive:
+    if prev_agg is None and agg_history is None and attack.adaptive:
         prev_agg = jnp.zeros(stacked.shape[1:], stacked.dtype)
     mean, var = honest_statistics(stacked, mask)
     ctx = build_context(
         attack, m=m, alpha=alpha, strength=strength, mask=mask, rows=stacked,
         own=stacked, honest_mean=mean, honest_var=var, key=key,
-        prev_agg=prev_agg, rnd=rnd,
+        prev_agg=prev_agg, agg_history=agg_history, staleness=staleness, rnd=rnd,
     )
     bad = attack.payload(ctx)
     bshape = (m,) + (1,) * (stacked.ndim - 1)
@@ -160,6 +180,8 @@ def payload_from_stats(
     own: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
     prev_agg: Optional[jax.Array] = None,
+    agg_history: Optional[jax.Array] = None,
+    staleness=None,
     rnd=None,
 ) -> jax.Array:
     """The bad-row value for the no-rows (psum/streaming) path.
@@ -181,12 +203,12 @@ def payload_from_stats(
             f"attack {attack.name!r} reads the worker's own gradient row; the "
             "caller must pass own= (honest_mean is only a shape donor)")
     ref = own if own is not None else honest_mean
-    if prev_agg is None and attack.adaptive:
+    if prev_agg is None and agg_history is None and attack.adaptive:
         prev_agg = jnp.zeros_like(ref)
     ctx = build_context(
         attack, m=m, alpha=alpha, strength=strength, own=ref,
         honest_mean=honest_mean, honest_var=honest_var, key=key,
-        prev_agg=prev_agg, rnd=rnd,
+        prev_agg=prev_agg, agg_history=agg_history, staleness=staleness, rnd=rnd,
     )
     return attack.payload(ctx)
 

@@ -126,10 +126,17 @@ def _zero(ctx: AttackContext) -> jax.Array:
 
 
 def _stale(ctx: AttackContext) -> jax.Array:
-    # Adaptive: replay the PREVIOUS round's broadcast aggregate (public
-    # state, so still local access) scaled by strength — a stale/echo
-    # gradient that poisons momentum-style dynamics.
-    return ctx.strength * jnp.broadcast_to(ctx.prev_agg, ctx.own.shape).astype(
+    # Adaptive: replay a PAST broadcast aggregate (public state, so still
+    # local access) scaled by strength — a stale/echo gradient that
+    # poisons momentum-style dynamics.  The replay depth is the worker's
+    # actual staleness (clipped to the history the engine kept): in a
+    # synchronous round that is the previous broadcast (the legacy echo);
+    # in a buffered async round (fed/async_rounds.py) a lagging worker
+    # replays the aggregate it genuinely last saw, s rounds back.
+    hist = ctx.agg_history
+    depth = jnp.clip(jnp.asarray(ctx.staleness, jnp.int32), 1, hist.shape[0])
+    stale = jax.lax.dynamic_index_in_dim(hist, depth - 1, 0, keepdims=False)
+    return ctx.strength * jnp.broadcast_to(stale, ctx.own.shape).astype(
         ctx.own.dtype
     )
 
@@ -173,7 +180,13 @@ register(Attack("gauss", LOCAL, _gauss, strength=1.0, randomized=True,
 register(Attack("zero", LOCAL, _zero, strength=1.0,
                 summary="zero gradient (free-rider)"))
 register(Attack("stale", LOCAL, _stale, strength=1.0, adaptive=True,
-                summary="s * previous broadcast aggregate (echo)"))
+                summary="s * stale broadcast aggregate, replayed at true depth"))
+register(Attack("stale_exploit", LOCAL, _stale, strength=1.0, adaptive=True,
+                arrival="last",
+                summary="stale replay timed to lag into the buffer tail"))
+register(Attack("stale_exploit_greedy", LOCAL, _stale, strength=1.0, adaptive=True,
+                arrival="greedy",
+                summary="stale replay with greedily-timed arrivals"))
 register(Attack("label_flip", DATA, corrupt_labels=_flip_labels,
                 summary="y -> (C-1) - y on Byzantine shards"))
 register(Attack("random_label", DATA, corrupt_labels=_random_labels,

@@ -61,6 +61,7 @@ DEFAULT_ATTACKS: Tuple[Tuple[str, float], ...] = (
     ("gauss", 10.0),
     ("zero", 1.0),
     ("stale", 1.0),
+    ("stale_exploit", 1.0),
     ("label_flip", 1.0),
     ("random_label", 1.0),
 )
@@ -229,6 +230,182 @@ def evaluate(cfg: MatrixConfig = MatrixConfig(), verbose: bool = False) -> dict:
     return out
 
 
+# ------------------------------------------------------- async buffer cells
+#
+# Buffered-round scenario cells: the stale_exploit adversary packs the
+# buffer window (its q reports always make the k-of-m buffer, replaying
+# the aggregate from ``replay_depth`` rounds back) while honest dropout
+# shrinks the honest side — the worst-case composition
+# theory.effective_buffer models.  Buffer composition is STATIC per cell
+# ((k, q_buf, h_buf) fix the trace shapes), so each cell is its own tiny
+# jit; the scan carries (w, aggregate-history) so the replay targets real
+# past broadcasts.  Gated against the effective-m rates
+# (theory.delta_median_async / delta_trimmed_async); cells whose
+# concentrated alpha_eff crosses an aggregator's breakdown point are
+# reported ungated, and all-Byzantine buffers (h_buf = 0) are recorded
+# infeasible rather than silently skipped.
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncMatrixConfig:
+    aggregators: Tuple[str, ...] = ("median", "trimmed_mean")
+    alphas: Tuple[float, ...] = (0.05, 0.25)
+    k_fracs: Tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)
+    dropouts: Tuple[float, ...] = (0.0, 0.25)
+    ms: Tuple[int, ...] = (16, 32)
+    beta: float = 0.3
+    n: int = 256
+    d: int = 32
+    sigma: float = 0.5
+    iters: int = 60
+    lr: float = 0.5
+    seed: int = 0
+    attack: str = "stale_exploit"
+    strength: float = 1.0
+    replay_depth: int = 2  # rounds back the exploiters' replay reaches
+    history: int = 3  # broadcast-aggregate history depth carried
+
+
+ASYNC_SMOKE = AsyncMatrixConfig(
+    ms=(16,), k_fracs=(0.5, 1.0), n=64, d=16, iters=40)
+
+
+def cell_bound_async(agg: str, alpha: float, beta: float, n: int, m: int,
+                     k: int, dropout: float, d: int,
+                     sigma: float) -> Optional[float]:
+    """Effective-m theory bound for one buffered cell; None = the
+    concentrated alpha_eff is beyond the aggregator's breakdown point."""
+    k_act, alpha_eff = theory.effective_buffer(alpha, m, k, dropout)
+    if agg == "median":
+        if alpha_eff >= 0.5:
+            return None
+        return K_MEDIAN * theory.delta_median_async(
+            alpha, n, m, k, d, V=sigma, S=3.0, dropout=dropout)
+    if agg == "trimmed_mean":
+        if math.ceil(alpha_eff * k_act) > math.floor(beta * k_act):
+            return None  # buffer-concentrated breakdown
+        return K_TRIMMED * theory.delta_trimmed_async(
+            beta, alpha, n, m, k, d, v=sigma, dropout=dropout)
+    return None
+
+
+def _make_async_cell_fn(agg_name: str, cfg: AsyncMatrixConfig, m: int,
+                        q_start: int, q_buf: int, h_buf: int, data,
+                        counter: list):
+    """err = f(key) for one static buffer composition: q_buf stale-replay
+    Byzantine rows + h_buf fresh honest rows (workers q..q+h_buf-1)."""
+    x, y, _, _, w_star = data
+    n = cfg.n
+    k_act = q_buf + h_buf
+    agg = aggregators.get_aggregator(agg_name, cfg.beta)
+    atk = engine.as_attack(cfg.attack)
+
+    def grads_of(w):
+        pred = jnp.einsum("mnd,d->mn", x, w)
+        return jnp.einsum("mnd,mn->md", x, pred - y) / n
+
+    def cell(key):
+        counter[0] += 1  # executes once per trace (python side effect)
+        del key  # composition is deterministic; kept for signature parity
+
+        def step(carry, r):
+            w, hist = carry
+            g = grads_of(w)
+            honest = g[q_start:q_start + h_buf]
+            if q_buf > 0:
+                ctx = engine.build_context(
+                    atk, m=k_act, alpha=q_buf / k_act,
+                    strength=cfg.strength, own=jnp.zeros((q_buf, cfg.d)),
+                    agg_history=hist,
+                    staleness=jnp.int32(cfg.replay_depth), rnd=r)
+                rows = jnp.concatenate(
+                    [jnp.broadcast_to(atk.payload(ctx), (q_buf, cfg.d)),
+                     honest], axis=0)
+            else:
+                rows = honest
+            g_agg = agg(rows)
+            w2 = w - cfg.lr * g_agg
+            hist2 = jnp.concatenate([g_agg[None], hist[:-1]], axis=0)
+            return (w2, hist2), None
+
+        w0 = jnp.zeros_like(w_star)
+        hist0 = jnp.zeros((cfg.history, cfg.d))
+        (w_fin, _), _ = jax.lax.scan(step, (w0, hist0), jnp.arange(cfg.iters))
+        err = jnp.linalg.norm(w_fin - w_star)
+        return jnp.nan_to_num(err, nan=jnp.inf, posinf=jnp.inf)
+
+    return cell
+
+
+def evaluate_async(cfg: AsyncMatrixConfig = AsyncMatrixConfig(),
+                   verbose: bool = False) -> dict:
+    """Run the buffered-round grid; same payload shape as evaluate()."""
+    counter = [0]
+    cells = []
+    for m in cfg.ms:
+        data = _make_data(
+            MatrixConfig(n=cfg.n, d=cfg.d, sigma=cfg.sigma, seed=cfg.seed), m)
+        for agg_name in cfg.aggregators:
+            for alpha in cfg.alphas:
+                q = engine.num_byzantine(alpha, m)
+                for k_frac in cfg.k_fracs:
+                    k = max(1, int(round(k_frac * m)))
+                    for dropout in cfg.dropouts:
+                        k_act, alpha_eff = theory.effective_buffer(
+                            alpha, m, k, dropout)
+                        q_buf = min(k, q)
+                        h_buf = k_act - q_buf
+                        rec = {
+                            "attack": cfg.attack, "aggregator": agg_name,
+                            "alpha": alpha, "m": m, "k": k, "k_frac": k_frac,
+                            "dropout": dropout, "k_actual": k_act,
+                            "alpha_eff": alpha_eff,
+                            "m_eff": max(1, k_act - q_buf),
+                            "strength": cfg.strength,
+                        }
+                        if h_buf < 1:  # all-Byzantine buffer: no estimate
+                            cells.append({**rec, "feasible": False,
+                                          "err": None, "bound": None,
+                                          "gated": False, "ok": True})
+                            continue
+                        fn = jax.jit(_make_async_cell_fn(
+                            agg_name, cfg, m, q, q_buf, h_buf, data, counter))
+                        err = float(fn(jax.random.PRNGKey(cfg.seed + 1)))
+                        bound = cell_bound_async(
+                            agg_name, alpha, cfg.beta, cfg.n, m, k, dropout,
+                            cfg.d, cfg.sigma)
+                        cells.append({
+                            **rec, "feasible": True, "err": err,
+                            "bound": bound, "gated": bound is not None,
+                            "ok": bound is None or err <= bound,
+                        })
+    violations = [c for c in cells if not c["ok"]]
+    out = {
+        "task": "linreg-prop1-buffered",
+        "config": dataclasses.asdict(cfg),
+        "num_traces": counter[0],
+        "cells": cells,
+        "violations": violations,
+    }
+    if verbose:
+        for c in cells:
+            if not c["feasible"]:
+                gate = "infeasible (all-Byzantine buffer)"
+            elif not c["ok"]:
+                gate = "VIOLATION"
+            elif c["gated"]:
+                gate = f"<= {c['bound']:.3f}"
+            else:
+                gate = "ungated (alpha_eff breakdown)"
+            e = "   --   " if c["err"] is None else f"{min(c['err'], 1e9):8.4f}"
+            print(f"  async {c['aggregator']:13s} a={c['alpha']:.2f} "
+                  f"m={c['m']:3d} k={c['k']:3d} drop={c['dropout']:.2f} "
+                  f"a_eff={c['alpha_eff']:.2f} err={e}  [{gate}]")
+        print(f"  {len(cells)} async cells, {counter[0]} traces, "
+              f"{len(violations)} violations")
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.attacks.matrix",
@@ -242,17 +419,24 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args(argv)
     cfg = SMOKE if args.smoke else MatrixConfig()
+    acfg = ASYNC_SMOKE if args.smoke else AsyncMatrixConfig()
     if args.seed is not None:
         cfg = dataclasses.replace(cfg, seed=args.seed)
+        acfg = dataclasses.replace(acfg, seed=args.seed)
     out = evaluate(cfg, verbose=True)
+    out["async"] = evaluate_async(acfg, verbose=True)
+    violations = out["violations"] + out["async"]["violations"]
     if args.json is not None:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
-        print(f"wrote {args.json} ({len(out['cells'])} cells)", file=sys.stderr)
-    if out["violations"]:
-        for c in out["violations"]:
+        print(f"wrote {args.json} ({len(out['cells'])} sync + "
+              f"{len(out['async']['cells'])} async cells)", file=sys.stderr)
+    if violations:
+        for c in violations:
+            where = (f"k={c['k']} drop={c['dropout']}" if "k" in c
+                     else f"m={c['m']}")
             print(f"GATE robustness: {c['aggregator']} x {c['attack']} "
-                  f"alpha={c['alpha']} m={c['m']}: err {c['err']:.4f} > "
+                  f"alpha={c['alpha']} {where}: err {c['err']:.4f} > "
                   f"bound {c['bound']:.4f}", file=sys.stderr)
         return 1
     return 0

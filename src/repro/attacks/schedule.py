@@ -56,6 +56,45 @@ class GreedyScheduler:
         return max(range(self.num_attacks), key=lambda i: self._damage[i])
 
 
+# Arrival-timing modes a greedy async adversary explores.  "honest"
+# means the Byzantine clients keep their simulated latencies; "first"
+# rushes the buffer window; "last" lags into the buffer tail (maximum
+# staleness that still lands in the aggregate).  Distinct from the
+# per-attack ARRIVAL_BEHAVIOURS declaration (attacks/base.py): an attack
+# declared ``greedy`` searches over THESE modes at run time.
+ARRIVAL_MODES = ("honest", "first", "last")
+
+
+class ArrivalScheduler:
+    """Explore-then-exploit over arrival-timing modes.
+
+    A thin wrapper around :class:`GreedyScheduler` whose candidates are
+    ``ARRIVAL_MODES`` rather than attack indices: the async engine asks
+    ``pick(r)`` for the timing mode of round ``r``'s Byzantine arrivals
+    and reports the realized damage (err drift — public state, every
+    worker sees the broadcast) via ``feedback``.  Deterministic and
+    RNG-free like its base, so the async determinism pins hold.
+    """
+
+    def __init__(self, modes: Sequence[str] = ARRIVAL_MODES, reexplore: int = 16):
+        self.modes = tuple(modes)
+        for m in self.modes:
+            if m not in ARRIVAL_MODES:
+                raise ValueError(
+                    f"unknown arrival mode {m!r}; want one of {ARRIVAL_MODES}")
+        self._sched = GreedyScheduler(len(self.modes), reexplore=reexplore)
+
+    def pick(self, r: int) -> str:
+        return self.modes[self._sched.pick(r)]
+
+    def feedback(self, r: int, damage: float) -> None:
+        self._sched.feedback(r, damage)
+
+    def best(self) -> Optional[str]:
+        idx = self._sched.best()
+        return None if idx is None else self.modes[idx]
+
+
 def schedule_indices(
     schedule: str, num_attacks: int, num_rounds: int,
     damages: Optional[Sequence[float]] = None,

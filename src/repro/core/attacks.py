@@ -125,7 +125,9 @@ def byzantine_payload(cfg: AttackConfig, honest_mean: jax.Array,
                       m: Optional[int] = None,
                       own: Optional[jax.Array] = None,
                       key: Optional[jax.Array] = None,
-                      prev_agg: Optional[jax.Array] = None) -> jax.Array:
+                      prev_agg: Optional[jax.Array] = None,
+                      agg_history: Optional[jax.Array] = None,
+                      staleness=None) -> jax.Array:
     """The bad-row value for a gradient-space attack, given the honest
     statistics the colluders observe.
 
@@ -143,12 +145,15 @@ def byzantine_payload(cfg: AttackConfig, honest_mean: jax.Array,
         raise ValueError("byzantine_payload called with attack 'none'")
     return engine.payload_from_stats(
         atk, honest_mean, honest_var, m=m if m is not None else 0,
-        alpha=cfg.alpha, strength=strength, own=own, key=key, prev_agg=prev_agg)
+        alpha=cfg.alpha, strength=strength, own=own, key=key, prev_agg=prev_agg,
+        agg_history=agg_history, staleness=staleness)
 
 
 def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array,
                           *, key: Optional[jax.Array] = None,
                           prev_agg: Optional[jax.Array] = None,
+                          agg_history: Optional[jax.Array] = None,
+                          staleness=None,
                           rnd=None) -> jax.Array:
     """Replace Byzantine rows of a stacked per-worker array ``(m, ...)``.
 
@@ -163,4 +168,4 @@ def apply_gradient_attack(cfg: AttackConfig, stacked: jax.Array, mask: jax.Array
         return stacked  # data attacks corrupt samples upstream
     return engine.apply_to_rows(
         atk, stacked, mask, alpha=cfg.alpha, strength=strength, key=key,
-        prev_agg=prev_agg, rnd=rnd)
+        prev_agg=prev_agg, agg_history=agg_history, staleness=staleness, rnd=rnd)

@@ -113,6 +113,86 @@ def one_round_rate(alpha: float, n: int, m: int) -> float:
     return median_rate(alpha, n, m)  # same order; distinct name for callers
 
 
+# --------------------------------------------------- buffered async rounds
+#
+# A buffered round (fed/async_rounds.py) aggregates only the first k of
+# m arrivals.  An adversary that controls arrival TIMING (the paper's
+# arbitrary-behaviour model extended to the timing channel) packs every
+# Byzantine report it can into the buffer, so the k aggregated rows see
+# a CONCENTRATED Byzantine fraction alpha_eff = q_buf/k >= alpha, while
+# the statistical averaging only benefits from the honest rows that made
+# it in.  The async rates are therefore the synchronous formulas
+# evaluated at (alpha_eff, m_eff = honest-in-buffer count) — the
+# "effective-m correction" the async matrix cells and the throughput
+# benchmark gate against.
+
+
+def buffer_byzantine(alpha: float, m: int, k: int) -> int:
+    """Worst-case Byzantine arrivals inside a k-of-m buffer.
+
+    With q = ceil(alpha*m) Byzantine clients in the cohort all timing
+    their reports to land first, min(k, q) of the k buffered rows are
+    Byzantine (q is capped at m-1 exactly like engine.num_byzantine)."""
+    if not 1 <= k <= m:
+        raise ValueError(f"need 1 <= k <= m, got k={k}, m={m}")
+    q = min(m - 1, math.ceil(alpha * m)) if alpha > 0 else 0
+    return min(k, q)
+
+
+def effective_buffer(alpha: float, m: int, k: int,
+                     dropout: float = 0.0) -> tuple:
+    """(k_actual, alpha_eff) of a k-of-m buffer under adversarial timing.
+
+    ``dropout`` is the honest dropout rate: of the m - q honest clients,
+    round((m-q)*(1-dropout)) are available; the buffer fills with all
+    q_buf Byzantine rows plus however many honest rows remain, so it may
+    close UNDER-FULL (k_actual < k) — the timeout path of the engine.
+    alpha_eff = q_buf / k_actual is the Byzantine fraction the robust
+    aggregator actually faces."""
+    q = min(m - 1, math.ceil(alpha * m)) if alpha > 0 else 0
+    q_buf = min(k, q)
+    h_avail = int(round((m - q) * (1.0 - dropout)))
+    h_buf = min(k - q_buf, h_avail)
+    k_actual = max(1, q_buf + h_buf)
+    return k_actual, q_buf / k_actual
+
+
+def delta_median_async(alpha: float, n: int, m: int, k: int, d: int,
+                       V: float, S: float, dropout: float = 0.0,
+                       eps: float = 1.0 / 6.0, LhatD: float = 1.0) -> float:
+    """Eq. (3)'s Δ at the buffer's effective (alpha_eff, m_eff).
+
+    m_eff = k_actual - q_buf is the honest-in-buffer count: only those
+    rows contribute to the coordinate-wise medians' concentration, so
+    they take the place of m in the synchronous formula."""
+    k_actual, alpha_eff = effective_buffer(alpha, m, k, dropout)
+    q_buf = round(alpha_eff * k_actual)
+    m_eff = max(1, k_actual - q_buf)
+    return delta_median(alpha_eff, n, m_eff, d, V, S, eps=eps, LhatD=LhatD)
+
+
+def delta_trimmed_async(beta: float, alpha: float, n: int, m: int, k: int,
+                        d: int, v: float, dropout: float = 0.0,
+                        eps: float = 1.0 / 6.0, LhatD: float = 1.0) -> float:
+    """Eq. (5)'s Δ' at the buffer's effective (beta, m_eff); the trim
+    level beta is a defence knob and does not concentrate, but the
+    averaging population shrinks to the honest-in-buffer count."""
+    k_actual, alpha_eff = effective_buffer(alpha, m, k, dropout)
+    q_buf = round(alpha_eff * k_actual)
+    m_eff = max(1, k_actual - q_buf)
+    return delta_trimmed(beta, n, m_eff, d, v, eps=eps, LhatD=LhatD)
+
+
+def async_optimal_rate(alpha: float, n: int, m: int, k: int,
+                       dropout: float = 0.0) -> float:
+    """alpha_eff/√n + 1/√(n·m_eff): the order-optimal target the buffered
+    engine is held to (constants dropped), mirroring optimal_rate."""
+    k_actual, alpha_eff = effective_buffer(alpha, m, k, dropout)
+    q_buf = round(alpha_eff * k_actual)
+    m_eff = max(1, k_actual - q_buf)
+    return alpha_eff / math.sqrt(n) + 1.0 / math.sqrt(n * m_eff)
+
+
 def loglog_slope(xs, ys) -> float:
     """OLS slope of log(y) on log(x) — used to check empirical scalings."""
     lx = [math.log(x) for x in xs]

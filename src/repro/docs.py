@@ -1,16 +1,20 @@
 """Registry-generated reference docs: ``python -m repro.docs``.
 
-The attack, aggregator, and collective-strategy tables in README.md are
-GENERATED from the live registries — the single sources of truth every
-runtime surface already dispatches through:
+The attack, aggregator, collective-strategy, and staleness-policy
+tables in README.md are GENERATED from the live registries — the single
+sources of truth every runtime surface already dispatches through:
 
 - attacks:     ``repro.attacks.registered()`` (name, access level,
-               behaviour flags, default strength, payload summary);
+               behaviour flags incl. arrival timing, default strength,
+               payload summary);
 - aggregators: ``repro.core.aggregators.registered_aggregators()``
                (name, exact/approx estimator, breakdown point);
 - strategies:  ``repro.rounds.comm.registered_strategies()`` (name,
                estimator, per-device collective bytes per round, highest
-               reproducible attack access level).
+               reproducible attack access level);
+- policies:    ``repro.fed.staleness.registered_policies()`` (name,
+               staleness weight, trim/drop behaviour, default knob/cap —
+               the buffered-async staleness policies).
 
 Each table lives between ``<!-- generated:NAME ... -->`` and
 ``<!-- end:generated:NAME -->`` markers; everything outside the markers
@@ -63,6 +67,9 @@ def attack_table() -> str:
             ("needs-variance", a.needs_variance),
             ("reads-own", a.reads_own),
         ) if on]
+        if a.arrival is not None:
+            # times its arrival into the async buffer window
+            flags.append(f"times-arrival:{a.arrival}")
         rows.append((
             f"`{a.name}`",
             a.access + (" (**adaptive**)" if a.adaptive else ""),
@@ -108,10 +115,35 @@ def strategy_table() -> str:
          "max attack access", "note"), rows)
 
 
+def policy_table() -> str:
+    from repro.fed import staleness
+
+    rows = []
+    for name in staleness.registered_policies():
+        s = staleness.get_policy(name)
+        behaviour = []
+        if s.extra_trim:
+            behaviour.append("widens trim")
+        if s.drops_late:
+            behaviour.append(f"drops s > cap (default {s.cap})")
+        # show the weight at s=2 with the default knob so the discount
+        # curve is visible without reading the lambda
+        w2 = float(s.weight(2))
+        rows.append((
+            f"`{s.name}`",
+            f"w(2) = {w2:g} (knob {s.knob:g})" if w2 != 1.0 else "1 (no reweight)",
+            ", ".join(behaviour) if behaviour else "—",
+            s.summary,
+        ))
+    return _md_table(
+        ("policy", "staleness weight", "buffer behaviour", "note"), rows)
+
+
 TABLES = {
     "attacks": attack_table,
     "aggregators": aggregator_table,
     "strategies": strategy_table,
+    "policies": policy_table,
 }
 
 
@@ -163,7 +195,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.docs",
         description="Regenerate the registry-backed README tables "
-                    "(attacks, aggregators, collective strategies)")
+                    "(attacks, aggregators, collective strategies, "
+                    "staleness policies)")
     ap.add_argument("--check", action="store_true",
                     help="verify the tables match the registries; exit 1 on "
                          "drift without writing anything (the CI docs gate)")

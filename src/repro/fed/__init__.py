@@ -13,8 +13,12 @@ materialized. This package provides:
   chunks — O(m·d) time, O(nbins·d) memory, error ≤ one bin width;
 - rounds.py: the server loop — cohort sampling, per-round attack
   mixtures (AttackConfig), streaming aggregation, optimizer update;
-- run.py: ``python -m repro.fed.run`` CLI.
+- async_rounds.py: the buffered asynchronous server loop — first-k-of-m
+  buffers over the arrival-time simulator, staleness policies
+  (staleness.py registry) ahead of the unchanged robust aggregators;
+- run.py: ``python -m repro.fed.run`` CLI (``--async-buffer k`` switches
+  to the buffered engine).
 
-See DESIGN.md §Federated-scale for the estimator/error discussion.
+See DESIGN.md §Federated-scale and §Asynchronous rounds.
 """
-from repro.fed import population, rounds, streaming  # noqa: F401
+from repro.fed import async_rounds, population, rounds, staleness, streaming  # noqa: F401

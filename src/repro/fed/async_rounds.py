@@ -1,0 +1,343 @@
+"""Buffered asynchronous federated rounds (FedBuffer-style).
+
+The synchronous scheduler (fed/rounds.py) closes a round only when every
+sampled client reports — one straggler stalls the cohort and a dropout
+deadlocks it.  This engine instead closes each round when the first
+``k`` of the cohort's reports arrive:
+
+1. sample the round's cohort exactly like ``run_rounds`` (same key
+   chain, so enabling the simulator never changes WHO is sampled);
+2. draw per-client arrival times from the population's seeded arrival
+   simulator (:meth:`ClientPopulation.arrival_times` — latency model,
+   persistent stragglers, honest dropout) and merge them with the
+   *pending queue* of clients still in flight from earlier rounds;
+3. buffer the first ``k`` arrivals (stable order: time, then adversarial
+   priority, then insertion) and close at the k-th arrival time — or at
+   ``timeout`` when dropout leaves the buffer under-full;
+4. compute each buffered client's payload against the iterate it was
+   ACTUALLY sent (a report born in round ``r-s`` used ``w_{r-s}``), run
+   the configured staleness policy (fed/staleness.py: damp / widen trim
+   / drop), then the unchanged robust aggregator, then one optimizer
+   step.  Late finite arrivals stay pending with their remaining time;
+   reports older than ``max_staleness`` are discarded.
+
+Timing is part of the threat model: an attack registered with an
+``arrival`` behaviour (attacks/base.ARRIVAL_BEHAVIOURS) controls WHEN
+its Byzantine clients report — ``first`` rushes the buffer window,
+``last`` lags onto the buffer tail (maximally stale yet still
+aggregated, the stale_exploit adversary), ``greedy`` explores the modes
+per round and replays the most damaging (attacks/schedule
+.ArrivalScheduler, fed the same public err-drift signal as the greedy
+attack scheduler).  Adaptive attacks see the broadcast-aggregate
+*history* (``agg_history``) at their true staleness depth, so a lagging
+Byzantine report genuinely replays the state it last saw.
+
+Synchronous pin: with ``buffer_k == cohort_size`` and a zero-latency
+arrival model the buffer is the whole fresh cohort in cohort order and
+every staleness policy is the identity (the registry contract), so the
+engine takes a fast path that literally calls
+``fed.rounds.aggregate_cohort`` — bit-for-bit identical to
+``run_rounds``, same jaxpr, same collectives (tests/test_async_rounds
+pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attacks.schedule import ArrivalScheduler
+from repro.core import aggregators
+from repro.core.attacks import AttackConfig, apply_gradient_attack
+from repro.fed import rounds as sync_rounds
+from repro.fed import staleness as staleness_policies
+from repro.fed import streaming
+from repro.fed.population import ArrivalConfig, ClientPopulation
+from repro.fed.rounds import STREAMING_METHODS, AttackMixture, RoundConfig
+from repro.optim.optimizers import get_optimizer
+
+# arrival-time RNG stream tag: folded into PRNGKey(rcfg.seed) so arrival
+# draws are independent of the cohort stream (fold_in(root, r)) — the
+# simulator cannot perturb cohort sampling or attack keys
+_ARRIVAL_STREAM = 0xA54C
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Buffered-round knobs.
+
+    ``buffer_k`` is the number of arrivals that closes a round (clipped
+    to the candidate count; ``buffer_k >= cohort_size`` with no latency
+    spread degenerates to the synchronous engine).  ``max_staleness`` is
+    the oldest report (in rounds) the server still accepts — it also
+    bounds the iterate/aggregate history the engine keeps.  ``policy``
+    names a registered staleness policy (fed/staleness.py);
+    ``policy_knob``/``policy_cap`` override the policy's defaults when
+    set.  ``timeout`` closes an under-full buffer at that simulated time
+    (None = wait for the k-th finite arrival, however long)."""
+
+    buffer_k: int = 64
+    max_staleness: int = 4
+    policy: str = "damped"
+    policy_knob: Optional[float] = None
+    policy_cap: Optional[int] = None
+    timeout: Optional[float] = None
+
+    def __post_init__(self):
+        if self.buffer_k < 1:
+            raise ValueError(f"buffer_k must be >= 1, got {self.buffer_k}")
+        if self.max_staleness < 1:
+            raise ValueError(
+                f"max_staleness must be >= 1, got {self.max_staleness}")
+        staleness_policies.get_policy(self.policy)  # validate early
+
+
+def _resolve_arrival(attack: Optional[AttackConfig]) -> Optional[str]:
+    """The engine-attack arrival behaviour for this round's attack."""
+    if attack is None or attack.alpha <= 0:
+        return None
+    atk, _ = attack.resolve()
+    return None if atk is None else atk.arrival
+
+
+def _group_rows(pop: ClientPopulation, w_used: jax.Array, cids: jax.Array,
+                rcfg: RoundConfig, attack: Optional[AttackConfig],
+                agg_hist: jax.Array, s: int, born: int) -> jax.Array:
+    """Payload rows of one staleness group, chunked like the sync engine.
+
+    ``w_used`` is the iterate the group's clients were broadcast (s
+    rounds old); the attack key chain is seeded with the group's BORN
+    round — a replayed report carries the randomness it was computed
+    with, and groups cannot collide (one group per born round).  The
+    attack context gets the aggregate the group last saw as ``prev_agg``
+    (``agg_hist[s]``) plus the full history at staleness ``s+1``, so
+    stale-replay payloads index the broadcast they genuinely observed.
+    """
+    bounds = sync_rounds._chunk_bounds(int(cids.shape[0]), rcfg.chunk_clients)
+    base_key = jax.random.fold_in(jax.random.PRNGKey(7), born)
+    out = []
+    for j, (a, b) in enumerate(bounds):
+        c = cids[a:b]
+        if rcfg.local_steps > 1:
+            g = pop.client_deltas(w_used, c, rcfg.local_steps, rcfg.local_lr)
+        else:
+            g = pop.client_grads(w_used, c)
+        if attack is not None and attack.alpha > 0:
+            g = apply_gradient_attack(
+                attack, g, pop.is_byzantine(c),
+                key=jax.random.fold_in(base_key, j),
+                prev_agg=agg_hist[s], agg_history=agg_hist,
+                staleness=s + 1, rnd=born)
+        out.append(g)
+    return jnp.concatenate(out, axis=0)
+
+
+def _aggregate_buffer(rows: jax.Array, rcfg: RoundConfig,
+                      beta_eff: float) -> jax.Array:
+    """The sync engine's two aggregation paths over a materialized buffer."""
+    if rcfg.method in STREAMING_METHODS:
+        method = {"approx_median": "median",
+                  "approx_trimmed_mean": "trimmed_mean",
+                  "stream_mean": "mean"}[rcfg.method]
+        scfg = streaming.SketchConfig(nbins=rcfg.nbins, backend=rcfg.backend)
+        return streaming.aggregate_array_chunked(
+            rows, method, beta_eff, rcfg.chunk_clients, scfg)
+    return aggregators.get_aggregator(rcfg.method, beta_eff)(rows)
+
+
+def _time_byzantine(t: np.ndarray, prio: np.ndarray, byz_new: np.ndarray,
+                    mode: str, k: int, timeout: Optional[float]) -> None:
+    """Apply an arrival-timing override to this round's NEW Byzantine
+    arrivals, in place.
+
+    ``first``: report at t=0 ahead of every honest tie.  ``last``: lag
+    onto the buffer tail — land exactly at the (k-q)-th non-Byzantine
+    finite arrival (the latest moment that still makes the buffer), with
+    tie-priority AFTER honest rows, clamped to ``timeout``."""
+    q = int(byz_new.sum())
+    if q == 0 or mode == "honest":
+        return
+    if mode == "first":
+        t[byz_new] = 0.0
+        prio[byz_new] = -1
+        return
+    # mode == "last"
+    others = np.sort(t[~byz_new & np.isfinite(t)])
+    want = k - q  # honest arrivals that precede the Byzantine tail
+    if want <= 0:
+        boundary = 0.0
+    elif len(others) >= want:
+        boundary = float(others[want - 1])
+    else:
+        boundary = float(others[-1]) if len(others) else 0.0
+    if timeout is not None:
+        boundary = min(boundary, timeout)
+    t[byz_new] = boundary
+    prio[byz_new] = 1
+
+
+def run_async_rounds(
+    pop: ClientPopulation,
+    rcfg: RoundConfig,
+    async_cfg: AsyncConfig,
+    arrival: ArrivalConfig = ArrivalConfig(),
+    mixture: AttackMixture = AttackMixture(),
+    w0: Optional[jax.Array] = None,
+):
+    """Run the buffered async server loop; returns (w_final, history).
+
+    ``history[r]`` carries the synchronous keys ({"round", "attack",
+    "grad_norm", "err"} — same semantics as ``run_rounds``) plus the
+    async observables: ``duration`` (simulated round length = k-th
+    arrival time; the sync engine's would be the max), ``buffer`` (rows
+    aggregated after policy drops), ``staleness_mean`` (mean staleness
+    of the buffer), ``pending`` (in-flight reports carried to the next
+    round), and ``timing`` (the Byzantine arrival mode in effect)."""
+    H = async_cfg.max_staleness + 1
+    opt = get_optimizer(rcfg.optimizer, rcfg.lr)
+    w = jnp.zeros((pop.cfg.dim,)) if w0 is None else w0
+    state = opt.init(w)
+    root = jax.random.PRNGKey(rcfg.seed)
+    arr_root = jax.random.fold_in(jax.random.PRNGKey(rcfg.seed), _ARRIVAL_STREAM)
+    scheduler = mixture.make_scheduler()
+    timing_sched: Optional[ArrivalScheduler] = None
+    history = []
+    prev_g = None  # previous broadcast aggregate, transmitted scale (sync pin)
+    agg_hist = jnp.zeros((H, pop.cfg.dim))  # broadcast history, newest first
+    w_hist = [w] * H  # w_hist[s] == iterate broadcast s rounds ago
+    prev_err = float(jnp.linalg.norm(w - pop.w_star))
+    # pending queue: (client_id, born_round, remaining_time) of finite
+    # arrivals that missed their round's buffer
+    pending: list = []
+    n_join = int(math.ceil(arrival.churn * rcfg.cohort_size))
+
+    for r in range(rcfg.num_rounds):
+        attack = mixture.for_round(r, scheduler)
+        ids = pop.sample_cohort(jax.random.fold_in(root, r), rcfg.cohort_size)
+        arr_key = jax.random.fold_in(arr_root, r)
+        t_new = np.asarray(
+            pop.arrival_times(jax.random.fold_in(arr_key, 0), ids, arrival))
+        ids_np = np.asarray(ids)
+        born_new = np.full(ids_np.shape, r, dtype=np.int64)
+        if n_join > 0:  # mid-round churn: joiners land half a scale late
+            jids = pop.sample_cohort(jax.random.fold_in(arr_key, 1), n_join)
+            t_join = 0.5 * arrival.scale + np.asarray(
+                pop.arrival_times(jax.random.fold_in(arr_key, 2), jids, arrival))
+            ids_np = np.concatenate([ids_np, np.asarray(jids)])
+            t_new = np.concatenate([t_new, t_join])
+            born_new = np.concatenate(
+                [born_new, np.full(n_join, r, dtype=np.int64)])
+
+        # merge the pending queue (insertion-first: they have waited)
+        cand_ids = np.concatenate(
+            [np.asarray([p[0] for p in pending], dtype=ids_np.dtype), ids_np])
+        cand_born = np.concatenate(
+            [np.asarray([p[1] for p in pending], dtype=np.int64), born_new])
+        cand_t = np.concatenate(
+            [np.asarray([p[2] for p in pending], dtype=np.float64),
+             t_new.astype(np.float64)])
+        cand_prio = np.zeros(cand_t.shape, dtype=np.int64)
+        byz_new = np.zeros(cand_t.shape, dtype=bool)
+        byz_new[len(pending):] = np.asarray(pop.is_byzantine(
+            jnp.asarray(cand_ids[len(pending):])))
+
+        k = min(async_cfg.buffer_k, len(cand_t))
+        mode = _resolve_arrival(attack)
+        timing = mode or "honest"
+        if mode == "greedy":
+            if timing_sched is None:
+                timing_sched = ArrivalScheduler()
+            timing = timing_sched.pick(r)
+        if mode is not None:
+            _time_byzantine(cand_t, cand_prio, byz_new, timing, k,
+                            async_cfg.timeout)
+
+        order = np.lexsort((np.arange(len(cand_t)), cand_prio, cand_t))
+        n_finite = int(np.isfinite(cand_t[order]).sum())
+        if n_finite >= k:
+            t_close = float(cand_t[order[k - 1]])
+        else:
+            t_close = float(cand_t[order[n_finite - 1]]) if n_finite else 0.0
+        if async_cfg.timeout is not None:
+            t_close = min(t_close, async_cfg.timeout)
+        buf = [i for i in order if cand_t[i] <= t_close][:k]
+
+        # finite non-buffered reports stay in flight; stale beyond the
+        # cap (as of NEXT round) or infinite (dropped) are gone for good
+        in_buf = np.zeros(len(cand_t), dtype=bool)
+        in_buf[buf] = True
+        pending = [
+            (int(cand_ids[i]), int(cand_born[i]),
+             float(cand_t[i]) - t_close)
+            for i in range(len(cand_t))
+            if not in_buf[i] and np.isfinite(cand_t[i])
+            and (r + 1 - int(cand_born[i])) <= async_cfg.max_staleness
+        ]
+
+        s_vec = (r - cand_born[buf]).astype(np.int64)
+        keep, weights, beta_eff = staleness_policies.apply_policy(
+            async_cfg.policy, s_vec, knob=async_cfg.policy_knob,
+            cap=async_cfg.policy_cap, beta=rcfg.beta)
+
+        fresh_in_order = (
+            not np.any(s_vec) and keep.all() and float(weights.min()) == 1.0
+            and beta_eff == rcfg.beta and len(buf) == len(cand_t)
+            and np.array_equal(cand_ids[buf], ids_np)
+            and n_join == 0
+        )
+        if len(buf) == 0:
+            g = jnp.zeros((pop.cfg.dim,))  # nobody reported: null round
+        elif fresh_in_order:
+            # synchronous fast path: the buffer IS the fresh cohort in
+            # cohort order and the policy is the identity — delegate to
+            # the sync engine verbatim (bit-for-bit pin, same jaxpr)
+            g = sync_rounds.aggregate_cohort(
+                pop, w, ids, rcfg, attack, prev_agg=prev_g, rnd=r)
+        else:
+            groups = []  # (rows, weights) per staleness depth, fresh first
+            for s in sorted(set(int(x) for x in s_vec[keep])):
+                sel = [buf[i] for i in range(len(buf))
+                       if keep[i] and int(s_vec[i]) == s]
+                cids = jnp.asarray(cand_ids[sel], dtype=jnp.int32)
+                rows = _group_rows(pop, w_hist[s], cids, rcfg, attack,
+                                   agg_hist, s, r - s)
+                wsel = np.asarray(
+                    [weights[i] for i in range(len(buf))
+                     if keep[i] and int(s_vec[i]) == s])
+                groups.append((rows, wsel))
+            rows = jnp.concatenate([g_ for g_, _ in groups], axis=0)
+            w_pol = np.concatenate([ws for _, ws in groups])
+            if float(w_pol.min()) < 1.0:  # skip the multiply at identity
+                rows = rows * jnp.asarray(w_pol, rows.dtype)[:, None]
+            g = _aggregate_buffer(rows, rcfg, float(beta_eff))
+
+        prev_g = g  # transmitted scale, same as run_rounds
+        agg_hist = jnp.concatenate([g[None].astype(agg_hist.dtype),
+                                    agg_hist[:-1]], axis=0)
+        if rcfg.local_steps > 1:
+            g = g / rcfg.local_steps
+        w, state = opt.update(g, state, w, jnp.int32(r))
+        w_hist = [w] + w_hist[:-1]
+        err = float(jnp.linalg.norm(w - pop.w_star))
+        if scheduler is not None:
+            scheduler.feedback(r, err - prev_err)
+        if timing_sched is not None:
+            timing_sched.feedback(r, err - prev_err)
+        prev_err = err
+        n_kept = int(keep.sum()) if len(buf) else 0
+        history.append({
+            "round": r,
+            "attack": attack.name if attack is not None else "none",
+            "grad_norm": float(jnp.linalg.norm(g)),
+            "err": err,
+            "duration": t_close,
+            "buffer": n_kept,
+            "staleness_mean": float(s_vec[keep].mean()) if n_kept else 0.0,
+            "pending": len(pending),
+            "timing": timing,
+        })
+    return w, history

@@ -33,6 +33,44 @@ import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    """Arrival-time model for buffered async rounds (fed/async_rounds.py).
+
+    A client's report time is ``latency_draw * client_speed`` where the
+    draw is a fresh per-round sample from ``latency`` (scaled by
+    ``scale``/``spread``) and ``client_speed`` is a PERSISTENT per-client
+    lognormal multiplier (``client_spread`` > 0 makes some clients
+    chronically slow — the realistic cross-device regime where buffer
+    staleness correlates across rounds).  ``dropout`` is the per-round
+    probability an HONEST client never reports (Byzantine clients are
+    exempt: a worst-case adversary does not volunteer to drop out).
+    ``churn`` is the fraction of the cohort size that joins mid-round as
+    fresh clients.  Everything is a seeded, deterministic function of
+    (arrival key, client id) — the determinism pins rely on it.
+
+    ``latency``: zero | uniform | exponential | lognormal.  ``zero`` (the
+    default) makes every arrival instantaneous — the synchronous pin.
+    ``lognormal`` is the heavy-tailed regime the throughput benchmark
+    exercises (sigma = spread).
+    """
+
+    latency: str = "zero"
+    scale: float = 1.0  # mean-ish latency scale (time units are arbitrary)
+    spread: float = 1.0  # distribution shape: lognormal sigma, uniform width
+    dropout: float = 0.0  # per-round honest no-show probability
+    churn: float = 0.0  # mid-round joiners as a fraction of cohort size
+    client_spread: float = 0.0  # persistent per-client slowness (lognormal sigma)
+
+    def __post_init__(self):
+        if self.latency not in ("zero", "uniform", "exponential", "lognormal"):
+            raise ValueError(f"unknown latency model {self.latency!r}")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+        if self.churn < 0.0:
+            raise ValueError(f"churn must be >= 0, got {self.churn}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PopulationConfig:
     num_clients: int = 100_000
     samples_per_client: int = 32  # n: local shard size
@@ -146,3 +184,49 @@ class ClientPopulation:
         ids = jax.random.choice(
             key, self.cfg.num_clients, (cohort_size,), replace=False)
         return ids.astype(jnp.int32)
+
+    # -------------------------------------------------------------- arrivals
+
+    def client_speed(self, client_ids: jax.Array, acfg: ArrivalConfig) -> jax.Array:
+        """Persistent per-client slowness multiplier, (k,) float.
+
+        Lognormal with sigma ``client_spread``, keyed on the client id
+        from a stream independent of the data stream — the same client
+        is slow in every round (cross-device stragglers), without
+        perturbing its regenerated shard."""
+        if acfg.client_spread <= 0.0:
+            return jnp.ones(client_ids.shape, jnp.float32)
+        root = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), 0x510)
+        z = jax.vmap(
+            lambda i: jax.random.normal(jax.random.fold_in(root, i), ())
+        )(client_ids)
+        return jnp.exp(acfg.client_spread * z).astype(jnp.float32)
+
+    def arrival_times(self, key: jax.Array, client_ids: jax.Array,
+                      acfg: ArrivalConfig) -> jax.Array:
+        """Report times of one round's cohort, (k,) float; ``inf`` = dropped.
+
+        ``key`` is the round's arrival key (a stream separate from the
+        cohort/attack keys, so enabling the simulator cannot change which
+        clients are sampled or what gradients they compute).  Honest
+        clients no-show with probability ``dropout``; Byzantine clients
+        never drop out (the worst-case adversary always reports).  Times
+        are in arbitrary simulated units — only their ORDER and the
+        k-th/max statistics matter to the buffered engine."""
+        n = client_ids.shape[0]
+        klat, kdrop = jax.random.split(key)
+        if acfg.latency == "zero":
+            base = jnp.zeros((n,), jnp.float32)
+        elif acfg.latency == "uniform":
+            base = acfg.scale * jax.random.uniform(klat, (n,), maxval=acfg.spread)
+        elif acfg.latency == "exponential":
+            base = acfg.scale * jax.random.exponential(klat, (n,))
+        else:  # lognormal — the heavy-tailed straggler regime
+            base = acfg.scale * jnp.exp(
+                acfg.spread * jax.random.normal(klat, (n,)))
+        t = base.astype(jnp.float32) * self.client_speed(client_ids, acfg)
+        if acfg.dropout > 0.0:
+            drop = jax.random.bernoulli(kdrop, acfg.dropout, (n,))
+            drop = drop & ~self.is_byzantine(client_ids)
+            t = jnp.where(drop, jnp.inf, t)
+        return t

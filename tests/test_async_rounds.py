@@ -1,0 +1,483 @@
+"""Buffered asynchronous round engine (fed/async_rounds.py): the
+synchronous bit-for-bit pin, the seeded arrival simulator, buffer /
+pending / staleness semantics, the per-registered-staleness-policy
+contract, multi-round stale replay, arrival-timing scheduling, the
+effective-m theory helpers, and the async robustness-matrix cells."""
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import attacks
+from repro.attacks import engine
+from repro.attacks.schedule import ARRIVAL_MODES, ArrivalScheduler
+from repro.core import theory
+from repro.core.attacks import AttackConfig
+from repro.fed import async_rounds, staleness
+from repro.fed import rounds as sync_rounds
+from repro.fed.async_rounds import AsyncConfig, run_async_rounds
+from repro.fed.population import ArrivalConfig, ClientPopulation, PopulationConfig
+from repro.fed.rounds import AttackMixture, RoundConfig, run_rounds
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _pop(alpha=0.1, clients=400, dim=8, seed=0):
+    return ClientPopulation(PopulationConfig(
+        num_clients=clients, samples_per_client=16, dim=dim, alpha=alpha,
+        noise=0.5, seed=seed))
+
+
+def _rcfg(rounds=4, cohort=32, chunk=16, method="median", **kw):
+    return RoundConfig(num_rounds=rounds, cohort_size=cohort,
+                       chunk_clients=chunk, method=method, lr=0.3, seed=0,
+                       **kw)
+
+
+class TestSyncPin:
+    """k = m with zero latency must be the synchronous engine bit-for-bit
+    (ISSUE acceptance: same result, same jaxpr, same collective count —
+    pinned by asserting the fast path delegates to aggregate_cohort on
+    every round AND the outputs are exactly equal)."""
+
+    @pytest.mark.parametrize("mixture", [
+        AttackMixture(),
+        AttackMixture((AttackConfig("sign_flip", alpha=0.1, scale=50.0),)),
+        AttackMixture((AttackConfig("sign_flip", alpha=0.1),
+                       AttackConfig("alie", alpha=0.1, shift=1.0))),
+    ], ids=["clean", "sign_flip", "mixture"])
+    def test_bitwise_equal_to_run_rounds(self, mixture):
+        pop = _pop()
+        rcfg = _rcfg(rounds=5)
+        acfg = AsyncConfig(buffer_k=rcfg.cohort_size)
+        w_sync, h_sync = run_rounds(pop, rcfg, mixture)
+        w_async, h_async = run_async_rounds(
+            pop, rcfg, acfg, ArrivalConfig(latency="zero"), mixture)
+        np.testing.assert_array_equal(np.asarray(w_sync), np.asarray(w_async))
+        for hs, ha in zip(h_sync, h_async):
+            assert hs["err"] == ha["err"]
+            assert hs["grad_norm"] == ha["grad_norm"]
+            assert hs["attack"] == ha["attack"]
+            assert ha["duration"] == 0.0 and ha["staleness_mean"] == 0.0
+            assert ha["buffer"] == rcfg.cohort_size and ha["pending"] == 0
+
+    def test_fast_path_taken_every_round(self, monkeypatch):
+        """The pin is by construction: the async engine must CALL the sync
+        aggregation (same traced function, so the jaxpr and collective
+        count cannot differ), not merely match it numerically."""
+        calls = []
+        real = sync_rounds.aggregate_cohort
+
+        def spy(*a, **kw):
+            calls.append(1)
+            return real(*a, **kw)
+
+        monkeypatch.setattr(async_rounds.sync_rounds, "aggregate_cohort", spy)
+        pop = _pop()
+        rcfg = _rcfg(rounds=4)
+        run_async_rounds(pop, rcfg, AsyncConfig(buffer_k=rcfg.cohort_size),
+                         ArrivalConfig(latency="zero"),
+                         AttackMixture((AttackConfig("sign_flip", alpha=0.1),)))
+        assert len(calls) == rcfg.num_rounds
+
+    def test_slow_path_with_latency(self, monkeypatch):
+        """With k < m under latency the fast path must NOT be used."""
+        calls = []
+        real = sync_rounds.aggregate_cohort
+        monkeypatch.setattr(
+            async_rounds.sync_rounds, "aggregate_cohort",
+            lambda *a, **kw: calls.append(1) or real(*a, **kw))
+        pop = _pop()
+        rcfg = _rcfg(rounds=4)
+        run_async_rounds(pop, rcfg, AsyncConfig(buffer_k=16),
+                         ArrivalConfig(latency="lognormal"), AttackMixture())
+        assert calls == []
+
+
+class TestArrivalSimulator:
+    def test_deterministic(self):
+        pop = _pop()
+        ids = pop.sample_cohort(jax.random.PRNGKey(3), 64)
+        acfg = ArrivalConfig(latency="lognormal", dropout=0.2,
+                             client_spread=0.5)
+        t1 = np.asarray(pop.arrival_times(jax.random.PRNGKey(9), ids, acfg))
+        t2 = np.asarray(pop.arrival_times(jax.random.PRNGKey(9), ids, acfg))
+        np.testing.assert_array_equal(t1, t2)
+
+    def test_zero_latency_is_zero(self):
+        pop = _pop()
+        ids = jnp.arange(32, dtype=jnp.int32)
+        t = np.asarray(pop.arrival_times(
+            jax.random.PRNGKey(0), ids, ArrivalConfig(latency="zero")))
+        np.testing.assert_array_equal(t, np.zeros(32))
+
+    @pytest.mark.parametrize("latency", ["uniform", "exponential", "lognormal"])
+    def test_models_finite_positive(self, latency):
+        pop = _pop()
+        ids = jnp.arange(64, dtype=jnp.int32)
+        t = np.asarray(pop.arrival_times(
+            jax.random.PRNGKey(1), ids, ArrivalConfig(latency=latency)))
+        assert np.isfinite(t).all() and (t >= 0).all()
+        assert len(np.unique(t)) > 1  # an actual spread, not a constant
+
+    def test_dropout_honest_only(self):
+        pop = _pop(alpha=0.25, clients=200)
+        ids = jnp.arange(200, dtype=jnp.int32)
+        t = np.asarray(pop.arrival_times(
+            jax.random.PRNGKey(2), ids,
+            ArrivalConfig(latency="uniform", dropout=0.5)))
+        byz = np.asarray(pop.is_byzantine(ids))
+        assert np.isfinite(t[byz]).all()  # the adversary never no-shows
+        assert np.isinf(t[~byz]).sum() > 0  # honest clients do
+        t0 = np.asarray(pop.arrival_times(
+            jax.random.PRNGKey(2), ids, ArrivalConfig(latency="uniform")))
+        assert np.isfinite(t0).all()  # dropout=0: nobody drops
+
+    def test_client_speed_persistent_stragglers(self):
+        pop = _pop()
+        ids = jnp.arange(50, dtype=jnp.int32)
+        acfg = ArrivalConfig(latency="uniform", client_spread=1.0)
+        s1 = np.asarray(pop.client_speed(ids, acfg))
+        s2 = np.asarray(pop.client_speed(ids, acfg))
+        np.testing.assert_array_equal(s1, s2)  # same client, same speed
+        assert len(np.unique(s1)) > 1
+        ones = np.asarray(pop.client_speed(ids, ArrivalConfig()))
+        np.testing.assert_array_equal(ones, np.ones(50))
+
+    def test_arrival_stream_does_not_perturb_cohorts(self):
+        """Switching the latency model must not change WHO is sampled or
+        the clean sync trajectory — arrival keys are a separate stream."""
+        pop = _pop(alpha=0.0)
+        rcfg = _rcfg(rounds=3)
+        w_a, _ = run_async_rounds(
+            pop, rcfg, AsyncConfig(buffer_k=rcfg.cohort_size),
+            ArrivalConfig(latency="zero"))
+        w_sync, _ = run_rounds(pop, rcfg)
+        np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_sync))
+
+    def test_bad_config_rejected(self):
+        with pytest.raises(ValueError):
+            ArrivalConfig(latency="gaussian")
+        with pytest.raises(ValueError):
+            ArrivalConfig(dropout=1.0)
+        with pytest.raises(ValueError):
+            ArrivalConfig(churn=-0.1)
+
+
+class TestBufferSemantics:
+    def test_buffer_size_and_pending(self):
+        pop = _pop(alpha=0.0)
+        rcfg = _rcfg(rounds=6)
+        _, hist = run_async_rounds(
+            pop, rcfg, AsyncConfig(buffer_k=8, policy="none"),
+            ArrivalConfig(latency="uniform"))
+        assert all(h["buffer"] <= 8 for h in hist)
+        assert any(h["pending"] > 0 for h in hist)  # late rows stay in flight
+        assert any(h["staleness_mean"] > 0 for h in hist[1:])
+        # round duration = k-th arrival, strictly before the max under
+        # a genuine latency spread
+        assert all(h["duration"] > 0 for h in hist)
+
+    def test_timeout_caps_duration(self):
+        pop = _pop(alpha=0.0)
+        rcfg = _rcfg(rounds=4)
+        _, hist = run_async_rounds(
+            pop, rcfg, AsyncConfig(buffer_k=rcfg.cohort_size, timeout=0.5),
+            ArrivalConfig(latency="uniform", dropout=0.3))
+        assert all(h["duration"] <= 0.5 for h in hist)
+
+    def test_staleness_cap_bounds_history(self):
+        pop = _pop(alpha=0.0)
+        rcfg = _rcfg(rounds=8)
+        _, hist = run_async_rounds(
+            pop, rcfg, AsyncConfig(buffer_k=4, max_staleness=2, policy="none"),
+            ArrivalConfig(latency="lognormal", spread=2.0))
+        # with cap 2, no buffered row can be older than 2 rounds
+        assert all(h["staleness_mean"] <= 2.0 for h in hist)
+
+    def test_churn_joiners_enter_buffers(self):
+        pop = _pop(alpha=0.0)
+        rcfg = _rcfg(rounds=4)
+        _, hist = run_async_rounds(
+            pop, rcfg, AsyncConfig(buffer_k=rcfg.cohort_size),
+            ArrivalConfig(latency="uniform", churn=0.5))
+        # cohort + ceil(0.5*cohort) candidates compete for cohort_size slots
+        assert all(h["buffer"] == rcfg.cohort_size for h in hist)
+        assert any(h["pending"] > 0 for h in hist)
+
+    def test_bad_async_config_rejected(self):
+        with pytest.raises(ValueError):
+            AsyncConfig(buffer_k=0)
+        with pytest.raises(ValueError):
+            AsyncConfig(max_staleness=0)
+        with pytest.raises(ValueError):
+            AsyncConfig(policy="nonexistent")
+
+
+class TestStalenessPolicyContract:
+    """Per-registered-policy contract (DESIGN.md §Asynchronous rounds):
+    identity at zero staleness — the invariance the sync pin relies on —
+    plus monotone weights in [0, 1].  Runs against the live registry, so
+    a newly registered policy is covered automatically."""
+
+    @pytest.mark.fast
+    @pytest.mark.parametrize("name", staleness.registered_policies())
+    def test_identity_at_zero_staleness(self, name):
+        keep, w, beta_eff = staleness.apply_policy(
+            name, np.zeros(16, np.int64), beta=0.1)
+        assert keep.all()
+        np.testing.assert_array_equal(w, np.ones(16))
+        assert beta_eff == 0.1
+
+    @pytest.mark.fast
+    @pytest.mark.parametrize("name", staleness.registered_policies())
+    def test_weights_monotone_in_unit_interval(self, name):
+        spec = staleness.get_policy(name)
+        s = np.arange(0, 10)
+        w = spec.weight(s)
+        assert (w >= 0).all() and (w <= 1).all()
+        assert (np.diff(w) <= 1e-12).all(), f"{name} weight not nonincreasing"
+        assert w[0] == 1.0
+
+    def test_damped_discount(self):
+        spec = staleness.get_policy("damped")
+        np.testing.assert_allclose(spec.weight([1], knob=1.0), [0.5])
+        np.testing.assert_allclose(spec.weight([3], knob=0.5), [0.5])
+
+    def test_drop_never_empties_buffer(self):
+        keep, _, _ = staleness.apply_policy(
+            "drop", np.asarray([5, 6, 7]), cap=2)
+        assert keep.tolist() == [True, False, False]  # freshest survives
+
+    def test_drop_respects_cap(self):
+        keep, _, _ = staleness.apply_policy(
+            "drop", np.asarray([0, 1, 2, 3, 4]), cap=2)
+        assert keep.tolist() == [True, True, True, False, False]
+
+    def test_trim_late_widens_beta(self):
+        _, _, beta_eff = staleness.apply_policy(
+            "trim_late", np.asarray([0, 0, 1, 1]), beta=0.1)
+        assert beta_eff == pytest.approx(0.6, abs=1e-12) or beta_eff == 0.45
+        # exactly: min(0.45, 0.1 + 0.5) = 0.45
+        assert beta_eff == 0.45
+        _, _, b2 = staleness.apply_policy(
+            "trim_late", np.asarray([0, 0, 0, 1]), beta=0.1)
+        assert b2 == pytest.approx(0.35)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError):
+            staleness.register_policy(staleness.get_policy("none"))
+        with pytest.raises(ValueError):
+            staleness.get_policy("no_such_policy")
+
+    def test_policies_change_the_aggregate(self):
+        """Different policies must actually produce different trajectories
+        once the buffer contains stale rows."""
+        pop = _pop(alpha=0.0)
+        rcfg = _rcfg(rounds=6)
+        arr = ArrivalConfig(latency="lognormal", spread=2.0)
+        outs = {}
+        for pol in ("none", "damped", "drop"):
+            w, _ = run_async_rounds(
+                pop, rcfg, AsyncConfig(buffer_k=8, policy=pol), arr)
+            outs[pol] = np.asarray(w)
+        assert not np.array_equal(outs["none"], outs["damped"])
+        assert not np.array_equal(outs["none"], outs["drop"])
+
+
+class TestStaleReplayDepth:
+    """The promoted `stale` attack replays the broadcast aggregate at its
+    TRUE staleness depth (satellite 1), with the legacy single-round echo
+    as the depth-1 special case."""
+
+    def _ctx(self, hist, s):
+        atk = attacks.get_attack("stale")
+        own = jnp.zeros((4, hist.shape[1]))
+        return engine.build_context(
+            atk, m=8, alpha=0.5, strength=1.0, own=own,
+            agg_history=jnp.asarray(hist), staleness=s)
+
+    def test_depth_two_replays_older_broadcast(self):
+        hist = np.stack([np.full(6, 10.0), np.full(6, 20.0),
+                         np.full(6, 30.0)]).astype(np.float32)
+        atk = attacks.get_attack("stale")
+        p1 = np.asarray(atk.payload(self._ctx(hist, 1)))
+        p2 = np.asarray(atk.payload(self._ctx(hist, 2)))
+        p3 = np.asarray(atk.payload(self._ctx(hist, 3)))
+        np.testing.assert_allclose(p1, 10.0)  # newest-first history
+        np.testing.assert_allclose(p2, 20.0)
+        np.testing.assert_allclose(p3, 30.0)
+
+    def test_depth_clipped_to_history(self):
+        hist = np.stack([np.full(6, 10.0), np.full(6, 20.0)]).astype(np.float32)
+        atk = attacks.get_attack("stale")
+        p = np.asarray(atk.payload(self._ctx(hist, 99)))
+        np.testing.assert_allclose(p, 20.0)  # oldest available
+
+    def test_legacy_prev_agg_is_depth_one(self):
+        """prev_agg-only construction (every sync engine) must be bit-
+        compatible with the old single-round echo."""
+        atk = attacks.get_attack("stale")
+        prev = jnp.asarray(np.linspace(-1, 1, 6), jnp.float32)
+        ctx = engine.build_context(
+            atk, m=8, alpha=0.5, strength=2.0,
+            own=jnp.zeros((4, 6)), prev_agg=prev)
+        np.testing.assert_allclose(np.asarray(atk.payload(ctx)),
+                                   2.0 * np.asarray(prev)[None].repeat(4, 0))
+
+    @pytest.mark.fast
+    def test_exploit_variants_registered_with_arrival(self):
+        assert attacks.get_attack("stale").arrival is None
+        assert attacks.get_attack("stale_exploit").arrival == "last"
+        assert attacks.get_attack("stale_exploit_greedy").arrival == "greedy"
+        for name in ("stale_exploit", "stale_exploit_greedy"):
+            a = attacks.get_attack(name)
+            assert a.adaptive and a.access == "local"
+
+    def test_invalid_arrival_rejected(self):
+        from repro.attacks.base import Attack
+
+        with pytest.raises(ValueError):
+            Attack(name="bad", access="local", payload=lambda ctx: ctx.own,
+                   arrival="sometimes")
+
+
+class TestArrivalTiming:
+    def test_last_mode_lands_byzantine_in_buffer_tail(self):
+        t = np.asarray([0.1, 0.2, 0.3, 0.4, 9.0, 9.0], np.float64)
+        prio = np.zeros(6, np.int64)
+        byz = np.asarray([False, False, False, False, True, True])
+        async_rounds._time_byzantine(t, prio, byz, "last", k=4, timeout=None)
+        # boundary = (k-q)=2nd honest arrival = 0.2; byz tie-break AFTER
+        np.testing.assert_allclose(t[byz], 0.2)
+        assert (prio[byz] == 1).all()
+        order = np.lexsort((np.arange(6), prio, t))
+        buf = order[:4]
+        assert set(buf.tolist()) == {0, 1, 4, 5}  # both byz make the buffer
+
+    def test_first_mode_rushes_window(self):
+        t = np.asarray([0.5, 0.6, 0.7, 0.8], np.float64)
+        prio = np.zeros(4, np.int64)
+        byz = np.asarray([False, False, True, True])
+        async_rounds._time_byzantine(t, prio, byz, "first", k=2, timeout=None)
+        order = np.lexsort((np.arange(4), prio, t))
+        assert set(order[:2].tolist()) == {2, 3}
+
+    def test_scheduler_explores_then_exploits(self):
+        sched = ArrivalScheduler(reexplore=100)
+        picks = [sched.pick(r) for r in range(len(ARRIVAL_MODES))]
+        assert picks == list(ARRIVAL_MODES)  # one probe per mode
+        for r, mode in enumerate(picks):
+            sched.feedback(r, 5.0 if mode == "last" else 0.1)
+        assert sched.best() == "last"
+        assert sched.pick(len(ARRIVAL_MODES)) == "last"
+
+    def test_scheduler_rejects_unknown_mode(self):
+        with pytest.raises(ValueError):
+            ArrivalScheduler(modes=("honest", "teleport"))
+
+    def test_stale_exploit_damages_more_than_honest_timing(self):
+        """The buffer-window exploit must hurt at least as much as the
+        same payload arriving honestly — the timing channel is real."""
+        pop = _pop(alpha=0.2)
+        rcfg = _rcfg(rounds=6, method="median")
+        arr = ArrivalConfig(latency="lognormal")
+        acfg = AsyncConfig(buffer_k=8, policy="none")
+        mix_timed = AttackMixture(
+            (AttackConfig("stale_exploit", alpha=0.2, scale=1.0),))
+        mix_plain = AttackMixture(
+            (AttackConfig("stale", alpha=0.2, scale=1.0),))
+        _, h_timed = run_async_rounds(pop, rcfg, acfg, arr, mix_timed)
+        _, h_plain = run_async_rounds(pop, rcfg, acfg, arr, mix_plain)
+        assert h_timed[-1]["err"] >= 0.9 * h_plain[-1]["err"]
+        assert all(h["timing"] == "last" for h in h_timed)
+        assert all(h["timing"] == "honest" for h in h_plain)
+
+
+class TestEffectiveMTheory:
+    @pytest.mark.fast
+    def test_buffer_byzantine(self):
+        assert theory.buffer_byzantine(0.0, 64, 16) == 0
+        assert theory.buffer_byzantine(0.1, 64, 32) == 7  # q=7 < k
+        assert theory.buffer_byzantine(0.25, 64, 8) == 8  # q=16 > k
+        with pytest.raises(ValueError):
+            theory.buffer_byzantine(0.1, 16, 0)
+        with pytest.raises(ValueError):
+            theory.buffer_byzantine(0.1, 16, 17)
+
+    @pytest.mark.fast
+    def test_effective_buffer_concentration(self):
+        k_act, a_eff = theory.effective_buffer(0.1, 64, 64)
+        assert k_act == 64 and a_eff == pytest.approx(7 / 64)
+        # half buffer: same q competes for fewer slots -> concentrated
+        k_act, a_half = theory.effective_buffer(0.1, 64, 32)
+        assert k_act == 32 and a_half == pytest.approx(7 / 32)
+        assert a_half > a_eff
+        # dropout starves the honest side -> under-full buffer
+        k_act, a_drop = theory.effective_buffer(0.25, 16, 16, dropout=0.5)
+        assert k_act < 16 and a_drop > 0.25
+
+    @pytest.mark.fast
+    def test_async_bounds_widen_as_buffer_shrinks(self):
+        full = theory.delta_median_async(0.1, 32, 64, 64, 16, V=1.0, S=3.0)
+        half = theory.delta_median_async(0.1, 32, 64, 32, 16, V=1.0, S=3.0)
+        quarter = theory.delta_median_async(0.1, 32, 64, 16, 16, V=1.0, S=3.0)
+        assert full < half < quarter
+        t_full = theory.delta_trimmed_async(0.3, 0.1, 32, 64, 64, 16, v=1.0)
+        t_half = theory.delta_trimmed_async(0.3, 0.1, 32, 64, 32, 16, v=1.0)
+        assert t_full < t_half
+
+    @pytest.mark.fast
+    def test_async_rate_reduces_to_sync_shape(self):
+        """k=m, no dropout: the async rate is the sync optimal_rate with
+        alpha rounded up to the ceil'd Byzantine count."""
+        a_eff = math.ceil(0.1 * 64) / 64
+        want = a_eff / math.sqrt(32) + 1.0 / math.sqrt(32 * (64 - 7))
+        assert theory.async_optimal_rate(0.1, 32, 64, 64) == pytest.approx(want)
+        assert (theory.async_optimal_rate(0.1, 32, 64, 16)
+                > theory.async_optimal_rate(0.1, 32, 64, 64))
+
+
+class TestAsyncMatrixCells:
+    def test_smoke_grid_gated_and_feasible_flags(self):
+        from repro.attacks import matrix
+
+        out = matrix.evaluate_async(matrix.ASYNC_SMOKE)
+        assert out["violations"] == []
+        cells = out["cells"]
+        assert len(cells) == (len(matrix.ASYNC_SMOKE.aggregators)
+                              * len(matrix.ASYNC_SMOKE.alphas)
+                              * len(matrix.ASYNC_SMOKE.k_fracs)
+                              * len(matrix.ASYNC_SMOKE.dropouts)
+                              * len(matrix.ASYNC_SMOKE.ms))
+        for c in cells:
+            assert c["alpha_eff"] >= c["alpha"] - 1e-12
+            if c["feasible"]:
+                assert c["err"] is not None and c["err"] >= 0.0
+                if c["gated"]:
+                    assert c["err"] <= c["bound"]
+            else:  # all-Byzantine buffer is recorded, never silently skipped
+                assert c["err"] is None and c["ok"]
+        # the full-buffer column must be present and feasible
+        full = [c for c in cells if c["k_frac"] == 1.0]
+        assert full and all(c["feasible"] for c in full)
+
+
+def test_cli_async_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.fed.run", "--clients", "300",
+         "--cohort", "32", "--chunk", "16", "--rounds", "3", "--dim", "8",
+         "--alpha", "0.1", "--attack", "stale_exploit", "--method", "median",
+         "--async-buffer", "16", "--latency", "lognormal", "--dropout", "0.1",
+         "--staleness-policy", "damped"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "effective-m async rate" in r.stdout
+    assert "buf=" in r.stdout and "stale=" in r.stdout

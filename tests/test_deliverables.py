@@ -52,11 +52,11 @@ def test_dryrun_records_roofline_fields():
 def test_docs_exist_and_reference_sections():
     for name, needles in {
         "DESIGN.md": ["Arch-applicability", "Pallas kernel", "robust reduce-scatter",
-                      "Communication rounds"],
+                      "Communication rounds", "Asynchronous rounds"],
         "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis",
-                           "§Communication"],
+                           "§Communication", "§Asynchronous"],
         "README.md": ["bucketed", "fsdp", "Communication efficiency",
-                      "one_round_rate"],
+                      "one_round_rate", "async-buffer", "effective-m"],
     }.items():
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), name
@@ -101,6 +101,16 @@ def test_readme_strategy_table_covers_registry():
     block = _readme_block("strategies")
     for name in comm.registered_strategies():
         assert f"`{name}`" in block, f"strategy {name!r} missing from README table"
+
+
+def test_readme_policy_table_covers_registry():
+    """Every registered staleness policy must appear in the generated
+    README policies table (same contract as attacks/aggregators)."""
+    from repro.fed import staleness
+
+    block = _readme_block("policies")
+    for name in staleness.registered_policies():
+        assert f"`{name}`" in block, f"policy {name!r} missing from README table"
 
 
 def test_generated_docs_no_drift():

@@ -252,6 +252,67 @@ class TestRounds:
         assert (np.abs(got - exact) <= width * 1.0001 + 1e-6).all()
 
 
+class TestDeterminism:
+    """Same seed ⇒ identical cohort, arrival order, and final iterate —
+    regardless of chunk size, on BOTH engines (the ISSUE's determinism
+    regression).  Chunk-size pins use chunk-size-invariant attacks
+    (none / stale_exploit, whose payloads read only the broadcast
+    history); stats-oracle attacks are chunk-local by design."""
+
+    def _pop(self):
+        return ClientPopulation(PopulationConfig(
+            num_clients=400, samples_per_client=16, dim=8, alpha=0.1,
+            noise=0.5, seed=0))
+
+    def _rcfg(self, chunk):
+        return RoundConfig(num_rounds=4, cohort_size=32, chunk_clients=chunk,
+                           method="median", lr=0.3, seed=0)
+
+    @pytest.mark.parametrize("attack", [None, "stale_exploit"])
+    def test_sync_chunk_size_invariant(self, attack):
+        pop = self._pop()
+        mix = AttackMixture((AttackConfig(attack, alpha=0.1),)) \
+            if attack else AttackMixture()
+        w8, h8 = run_rounds(pop, self._rcfg(8), mix)
+        w32, h32 = run_rounds(pop, self._rcfg(32), mix)
+        np.testing.assert_array_equal(np.asarray(w8), np.asarray(w32))
+        assert [h["err"] for h in h8] == [h["err"] for h in h32]
+
+    @pytest.mark.parametrize("attack", [None, "stale_exploit"])
+    def test_async_chunk_size_invariant(self, attack):
+        from repro.fed.async_rounds import AsyncConfig, run_async_rounds
+        from repro.fed.population import ArrivalConfig
+
+        pop = self._pop()
+        mix = AttackMixture((AttackConfig(attack, alpha=0.1),)) \
+            if attack else AttackMixture()
+        acfg = AsyncConfig(buffer_k=16, policy="damped")
+        arr = ArrivalConfig(latency="lognormal", dropout=0.1, churn=0.1)
+        w8, h8 = run_async_rounds(pop, self._rcfg(8), acfg, arr, mix)
+        w32, h32 = run_async_rounds(pop, self._rcfg(32), acfg, arr, mix)
+        np.testing.assert_array_equal(np.asarray(w8), np.asarray(w32))
+        # arrival order / buffer composition pinned too, not just the iterate
+        for a, b in zip(h8, h32):
+            assert a["duration"] == b["duration"]
+            assert a["buffer"] == b["buffer"]
+            assert a["staleness_mean"] == b["staleness_mean"]
+            assert a["pending"] == b["pending"]
+
+    def test_async_rerun_identical(self):
+        from repro.fed.async_rounds import AsyncConfig, run_async_rounds
+        from repro.fed.population import ArrivalConfig
+
+        pop = self._pop()
+        mix = AttackMixture((AttackConfig("stale_exploit", alpha=0.1),))
+        acfg = AsyncConfig(buffer_k=12, policy="trim_late")
+        arr = ArrivalConfig(latency="exponential", dropout=0.2,
+                            client_spread=0.5)
+        w1, h1 = run_async_rounds(pop, self._rcfg(16), acfg, arr, mix)
+        w2, h2 = run_async_rounds(pop, self._rcfg(16), acfg, arr, mix)
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+        assert h1 == h2
+
+
 @pytest.mark.slow
 def test_large_cohort_smoke_100k():
     """A 10⁵-client cohort streams through the sketch in 512-row chunks;

@@ -28,16 +28,28 @@ rounds/time — see benchmarks/async_throughput.py) to PATH (default
 BENCH_async.json); like comm, the async suite ALWAYS gates (effective-m
 bounds + the ≥2× half-buffer speedup floor at matched clean error) on
 deterministic simulated time, so there is no noise margin.
+
+``--json-train [PATH]`` writes the training-throughput grid (strategy ×
+attack × config: step time, tokens/sec, HLO structure checks — see
+benchmarks/train_throughput.py) to PATH (default BENCH_train.json).  The
+train suite runs in a SUBPROCESS (it must force the simulated device
+count before jax initializes) and gates on its structural HLO checks;
+the wall-clock <10%-overhead gate is checked separately by
+``--gate-train [PATH]`` against the committed BENCH_train.json — a
+deterministic re-check of recorded numbers, immune to runner noise.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
+import tempfile
 import traceback
 
 SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg",
-          "comm", "async"]
+          "comm", "async", "train"]
 
 GATE_M = 32  # the gated worker count (the ROADMAP's deployment size)
 # Timing gate with a safety margin: on shared CI runners wall time is
@@ -64,6 +76,24 @@ def _gate_agg(records) -> list:
     return problems
 
 
+def _run_train_subprocess(smoke: bool) -> dict:
+    """Run the train-throughput grid in a fresh interpreter: it must set
+    --xla_force_host_platform_device_count BEFORE jax initializes, which
+    this process may already have done for another suite."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        path = tmp.name
+    try:
+        cmd = [sys.executable, "-m", "benchmarks.train_throughput",
+               "--json", path] + (["--smoke"] if smoke else [])
+        proc = subprocess.run(cmd, text=True)
+        with open(path) as f:
+            payload = json.load(f)
+        payload["subprocess_returncode"] = proc.returncode
+        return payload
+    finally:
+        os.unlink(path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -80,6 +110,16 @@ def main() -> None:
                     default=None, metavar="PATH",
                     help="write the buffered-async throughput grid to PATH "
                          "(default BENCH_async.json)")
+    ap.add_argument("--json-train", nargs="?", const="BENCH_train.json",
+                    default=None, metavar="PATH",
+                    help="write the training-throughput grid to PATH "
+                         "(default BENCH_train.json)")
+    ap.add_argument("--gate-train", nargs="?", const="BENCH_train.json",
+                    default=None, metavar="PATH",
+                    help="fail unless the committed BENCH_train.json at PATH "
+                         "shows <10%% robust-aggregation step-time overhead "
+                         "at its largest config (deterministic re-check of "
+                         "recorded numbers)")
     ap.add_argument("--smoke", action="store_true",
                     help="shrunken agg sweep for CI wall-clock budgets")
     ap.add_argument("--gate-agg", action="store_true",
@@ -93,6 +133,7 @@ def main() -> None:
     agg_records = None
     comm_payload = None
     async_payload = None
+    train_payload = None
     for suite in only:
         try:
             if suite == "table2":
@@ -113,6 +154,8 @@ def main() -> None:
                 from benchmarks import comm_efficiency as mod
             elif suite == "async":
                 from benchmarks import async_throughput as mod
+            elif suite == "train":
+                mod = None  # runs in a subprocess below
             else:
                 raise ValueError(f"unknown suite {suite}")
             if suite == "agg":
@@ -139,6 +182,17 @@ def main() -> None:
                         f"async-throughput gates failed: "
                         f"{len(async_payload['violations'])} theory violations, "
                         f"{len(async_payload['failed_gates'])} speedup failures")
+            elif suite == "train":
+                train_payload = _run_train_subprocess(args.smoke)
+                if (train_payload["violations"]
+                        or train_payload["failed_gates"]
+                        or train_payload["subprocess_returncode"] != 0):
+                    raise AssertionError(
+                        f"train-throughput gates failed: "
+                        f"{len(train_payload['violations'])} structural "
+                        f"violations, {len(train_payload['failed_gates'])} "
+                        f"overhead failures (subprocess rc "
+                        f"{train_payload['subprocess_returncode']})")
             else:
                 mod.run(verbose=True)
         except Exception:  # noqa: BLE001
@@ -167,12 +221,35 @@ def main() -> None:
         print(f"wrote {args.json_async} "
               f"({len(async_payload['records'])} records)", file=sys.stderr)
 
+    if args.json_train is not None and train_payload is not None:
+        train_payload = {**train_payload, "smoke": args.smoke}
+        with open(args.json_train, "w") as f:
+            json.dump(train_payload, f, indent=1)
+        print(f"wrote {args.json_train} "
+              f"({len(train_payload['records'])} records)", file=sys.stderr)
+
     if args.gate_agg:
         problems = _gate_agg(agg_records or [])
         for p in problems:
             print(f"GATE agg: {p}", file=sys.stderr)
         if problems:
             failed.append("agg-gate")
+
+    if args.gate_train is not None:
+        from benchmarks.train_throughput import gate_from_records
+        try:
+            with open(args.gate_train) as f:
+                committed = json.load(f)
+            g = gate_from_records(committed.get("records", []))
+        except FileNotFoundError:
+            g = {"ok": False, "reason": f"{args.gate_train} not found"}
+        if g.get("ok"):
+            print(f"GATE train: {g.get('robust_strategy')} overhead "
+                  f"{g.get('overhead', 0)*100:.1f}% at {g.get('config')} "
+                  f"(< {g.get('threshold', 0)*100:.0f}%)", file=sys.stderr)
+        else:
+            print(f"GATE train: FAILED {g}", file=sys.stderr)
+            failed.append("train-gate")
 
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)

@@ -4,18 +4,31 @@
 #   scripts/ci.sh             full tier-1 suite
 #   scripts/ci.sh fast        quick subset (-m fast) for per-push feedback
 #   scripts/ci.sh bench       agg micro-bench smoke + comm-efficiency grid
-#                             + buffered-async throughput grid: writes
-#                             BENCH_agg.json, BENCH_comm.json and
-#                             BENCH_async.json and FAILS if the pruned
-#                             selection network is slower than 0.7x the
-#                             XLA-sort median baseline at m=32, if any
-#                             comm cell violates its core/theory.py
-#                             bound, if tau>=4 local-update rounds save
-#                             less than 4x bytes vs tau=1 under ALIE, if
-#                             any async cell breaks its effective-m
-#                             bound, or if the k/m=0.5 buffer closes
-#                             rounds < 2x faster than sync under
-#                             heavy-tailed latency at matched clean error
+#                             + buffered-async throughput grid + the
+#                             training-throughput smoke: writes
+#                             BENCH_agg.json, BENCH_comm.json,
+#                             BENCH_async.json and BENCH_train.smoke.json
+#                             and FAILS if the pruned selection network
+#                             is slower than 0.7x the XLA-sort median
+#                             baseline at m=32, if any comm cell violates
+#                             its core/theory.py bound, if tau>=4
+#                             local-update rounds save less than 4x bytes
+#                             vs tau=1 under ALIE, if any async cell
+#                             breaks its effective-m bound, if the
+#                             k/m=0.5 buffer closes rounds < 2x faster
+#                             than sync under heavy-tailed latency at
+#                             matched clean error, if any trainer-window
+#                             HLO structure check fails (collective
+#                             counts, xdevice_steps byte scaling, no host
+#                             transfer in the scan window), or if the
+#                             COMMITTED BENCH_train.json stops showing
+#                             <10% robust-aggregation step-time overhead
+#                             vs plain data-parallel at the largest
+#                             config (run.py --gate-train; the committed
+#                             full grid is regenerated offline with
+#                             python -m benchmarks.train_throughput
+#                             --json BENCH_train.json — don't clobber it
+#                             with the smoke artifact)
 #   scripts/ci.sh docs        registry-generated README tables
 #                             (python -m repro.docs --check): FAILS if the
 #                             attack/aggregator/strategy tables drifted from
@@ -53,7 +66,12 @@ if [ "${1:-}" = "bench" ]; then
     # and BENCH_async.json baselines
     python -m benchmarks.run --only agg --json BENCH_agg.json --smoke --gate-agg || exit 1
     python -m benchmarks.run --only comm --json-comm BENCH_comm.json || exit 1
-    exec python -m benchmarks.run --only async --json-async BENCH_async.json
+    python -m benchmarks.run --only async --json-async BENCH_async.json || exit 1
+    # train: the smoke grid re-verifies the HLO structure gates on this
+    # host; the <10% overhead gate is a deterministic re-check of the
+    # COMMITTED full-grid numbers (immune to runner wall-clock noise)
+    exec python -m benchmarks.run --only train --smoke \
+        --json-train BENCH_train.smoke.json --gate-train BENCH_train.json
 fi
 if [ "${1:-}" = "docs" ]; then
     exec python -m repro.docs --check

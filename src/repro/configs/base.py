@@ -100,7 +100,7 @@ class ParallelConfig:
 
     agg_method: str = "median"  # mean|median|trimmed_mean|approx_median|approx_trimmed_mean
     agg_beta: float = 0.1
-    agg_strategy: str = "gather"  # gather|bucketed|hierarchical|chunked (paper-faithful default)
+    agg_strategy: str = "gather"  # gather|bucketed|hierarchical|chunked|psum (paper-faithful default; psum = plain DP mean, no robustness)
     param_mode: str = "replicated"  # replicated|fsdp (fsdp = robust reduce-scatter in bwd)
     remat: bool = True
     attn_chunk: int = 1024  # kv-block size for chunked attention (0 = plain)
@@ -125,3 +125,7 @@ class TrainConfig:
     seed: int = 0
     attack: str = "none"
     attack_alpha: float = 0.0
+    # device-steps window: the trainer (launch.trainer) scans this many
+    # micro-steps on-device per host round-trip — zero host syncs inside
+    # the window.  steps must be a multiple of it.  1 = step-by-step.
+    device_steps: int = 1

@@ -33,3 +33,23 @@ def smoke_config() -> ModelConfig:
         vocab=512,
         long_context_window=0,
     )
+
+
+def bench_config() -> ModelConfig:
+    """Reduced-shape variant of the REAL config for the training
+    throughput benchmark (benchmarks/train_throughput.py): same family,
+    GQA ratio, and ff multiple as llama3.2, sized so a multi-step
+    window finishes in CPU-benchmark time while model compute still
+    dominates the robust aggregation — the regime the <10% overhead
+    gate is about."""
+    return dataclasses.replace(
+        CONFIG,
+        name="llama3.2-bench",
+        n_layers=4,
+        d_model=256,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=688,
+        vocab=2048,
+        long_context_window=0,
+    )

@@ -42,7 +42,7 @@ SKIP = {("whisper-small", "long_500k"): "enc-dec audio model; 500k-token decode 
 
 
 def run_combo(arch: str, shape_name: str, mesh_kind: str, pcfg: ParallelConfig,
-              optimizer: str = "adamw") -> dict:
+              optimizer: str = "adamw", device_steps: int = 1) -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     shape = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
@@ -54,7 +54,7 @@ def run_combo(arch: str, shape_name: str, mesh_kind: str, pcfg: ParallelConfig,
         "seq_parallel": pcfg.seq_parallel, "remat": pcfg.remat,
         "workers": num_workers(mesh),
         "params": T.count_params(cfg), "active_params": T.count_active_params(cfg),
-        "variant": cfg.name,
+        "variant": cfg.name, "device_steps": device_steps,
     }
     t0 = time.time()
     with jax.set_mesh(mesh):
@@ -62,7 +62,22 @@ def run_combo(arch: str, shape_name: str, mesh_kind: str, pcfg: ParallelConfig,
         params = (steps.abstract_params_fsdp(cfg, mesh) if fsdp
                   else steps.abstract_params(cfg, mesh))
         inputs = steps.input_specs(cfg, shape, mesh)
-        if shape.kind == "train":
+        if shape.kind == "train" and device_steps > 1:
+            # lower the trainer's scan window instead of the single step:
+            # proves the device-steps harness compiles at production mesh
+            # scale, and the trip-count-aware HLO analysis below prices
+            # the whole window (collective bytes scale with device_steps)
+            from repro.launch import trainer
+            opt = get_optimizer(optimizer, 1e-4)
+            step_fn = trainer.make_window_step(
+                cfg, pcfg, mesh, opt, attack=AttackConfig("none", 0.0),
+                device_steps=device_steps)
+            state = trainer.abstract_state(cfg, mesh, opt, pcfg=pcfg)
+            batches = trainer.abstract_window_batches(cfg, shape, mesh,
+                                                      device_steps)
+            lowered = step_fn.lower(state, batches)
+            tokens = shape.global_batch * shape.seq_len * device_steps
+        elif shape.kind == "train":
             opt = get_optimizer(optimizer, 1e-4)
             opt_state = (steps.abstract_opt_state_fsdp(opt, cfg, mesh) if fsdp
                          else steps.abstract_opt_state(opt, cfg, mesh))
@@ -122,7 +137,10 @@ def main(argv=None):
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--all", action="store_true", help="run every combo on both meshes")
     ap.add_argument("--strategy", default="gather",
-                    choices=["gather", "bucketed", "hierarchical", "chunked"])
+                    choices=["gather", "bucketed", "hierarchical", "chunked", "psum"])
+    ap.add_argument("--device-steps", type=int, default=1,
+                    help="lower the trainer's device-steps scan window "
+                         "instead of the single train step (train shapes)")
     ap.add_argument("--param-mode", default="replicated", choices=["replicated", "fsdp"])
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--agg", default="median",
@@ -151,7 +169,7 @@ def main(argv=None):
     # resume support: skip combos already recorded (ok/skipped) in --out
     def key(arch, shape, mesh):
         return (arch, shape, mesh, args.strategy, args.agg, args.param_mode,
-                args.attn_chunk, args.seq_parallel)
+                args.attn_chunk, args.seq_parallel, args.device_steps)
 
     done = set()
     if args.out and os.path.exists(args.out):
@@ -167,7 +185,8 @@ def main(argv=None):
                               r.get("agg", "median"),
                               r.get("param_mode", "replicated"),
                               r.get("attn_chunk", 1024),
-                              r.get("seq_parallel", False)))
+                              r.get("seq_parallel", False),
+                              r.get("device_steps", 1)))
     combos = [c for c in combos if key(*c) not in done]
     print(f"# {len(combos)} combos to run ({len(done)} already done)", flush=True)
 
@@ -178,7 +197,8 @@ def main(argv=None):
                    "reason": SKIP[(arch, shape)]}
         else:
             try:
-                rec = run_combo(arch, shape, mesh, pcfg, args.optimizer)
+                rec = run_combo(arch, shape, mesh, pcfg, args.optimizer,
+                                device_steps=args.device_steps)
                 rec["status"] = "ok"
             except Exception as e:  # noqa: BLE001 — report, keep going
                 ok = False

@@ -102,6 +102,22 @@ def roofline_terms(
     }
 
 
+def roofline_tokens_per_s(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    tokens: int,
+    chips: int = 1,
+) -> float:
+    """Roofline-bound throughput: tokens processed by the analyzed program
+    divided by its bound time (max of the three terms).  For a trainer
+    window, pass the window's trip-count-aware HLO totals and
+    ``tokens = global_batch x seq_len x device_steps`` — the number the
+    throughput benchmark compares measured tokens/sec against."""
+    bound = roofline_terms(flops, hbm_bytes, coll_bytes, chips)["bound_s"]
+    return tokens / bound if bound > 0 else 0.0
+
+
 def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
     """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference forward."""
     mult = 6.0 if kind == "train" else 2.0

@@ -299,22 +299,43 @@ def _make_providers(cfg: ModelConfig, mesh, pcfg: ParallelConfig,
 # ---------------------------------------------------------------------------
 
 
-def make_train_step(
+@dataclasses.dataclass(frozen=True)
+class StepBody:
+    """The sharded train-step body + the specs needed to shard_map it.
+
+    ``body(params, opt_state, batch, step, atk_base) -> (params,
+    opt_state, metrics)`` must run INSIDE a shard_map whose manual axes
+    include ``waxes``; ``atk_base`` is the base PRNG key randomized
+    attacks fold the step index into (``make_train_step`` fixes it to
+    ``PRNGKey(0)``; the trainer threads it through the donated carry so
+    every micro-step of a scan window draws fresh attack noise).
+    ``pspec/ospec/batch_spec`` are the shard_map in_specs for params /
+    optimizer state / batch.
+    """
+
+    body: Any
+    pspec: Any
+    ospec: Any
+    batch_spec: Any
+    waxes: Tuple[str, ...]
+
+
+def make_step_body(
     cfg: ModelConfig,
     pcfg: ParallelConfig,
     mesh,
     opt: Optimizer,
     attack: Optional[AttackConfig] = None,
-):
-    """Returns jit'd ``train_step(params, opt_state, batch, step) ->
-    (params, opt_state, metrics)`` with robust aggregation over workers.
+) -> StepBody:
+    """Build (and validate) the per-step body shared by ``make_train_step``
+    and the device-steps trainer (``launch.trainer``).
 
-    ``attack`` may be any repro.attacks registry name via the
-    AttackConfig shim; the attack's declared gradient-access level is
-    validated against the collective strategy HERE (at build time) rather
-    than deep inside the traced collective: the chunked/psum strategy
-    never materializes per-worker rows, so omniscient attacks (mimic,
-    max_damage_tm, ...) need gather/bucketed.
+    All build-time validation lives here — attack access vs strategy,
+    adaptive/randomized rejection, local-steps constraints — so the two
+    integration points cannot drift.  When every model axis has size 1
+    the ShardCtx drops them: constraints over size-1 axes are no-ops,
+    and older jax's experimental shard_map (all mesh axes manual) cannot
+    emit them inside the manual region at all.
     """
     if attack is not None and attack.name != "none" and attack.alpha > 0:
         atk_spec, _ = attack.resolve()  # raises early on unknown names
@@ -337,7 +358,10 @@ def make_train_step(
                 "bucketed/chunked with param_mode='replicated'")
     waxes = mesh_lib.worker_axes(mesh)
     shp = mesh_lib.mesh_shape_dict(mesh)
-    ctx = ShardCtx(batch_axes=(), model_axes=mesh_lib.model_axes(mesh), mesh_shape=shp,
+    model_axes = mesh_lib.model_axes(mesh)
+    if all(shp.get(a, 1) == 1 for a in model_axes):
+        model_axes = ()  # size-1 constraints are no-ops; see docstring
+    ctx = ShardCtx(batch_axes=(), model_axes=model_axes, mesh_shape=shp,
                    seq_parallel=pcfg.seq_parallel)
     agg_dtype = jnp.dtype(pcfg.agg_dtype) if pcfg.agg_dtype else None
     fsdp = pcfg.param_mode == "fsdp"
@@ -365,7 +389,7 @@ def make_train_step(
             return T.loss_fn(params, batch, cfg, ctx, remat=pcfg.remat,
                              kv_block=pcfg.attn_chunk)
 
-    def body(params, opt_state, batch, step):
+    def body(params, opt_state, batch, step, atk_base):
         if tau == 1:
             loss, grads = jax.value_and_grad(local_loss)(params, batch)
         else:
@@ -378,7 +402,7 @@ def make_train_step(
                 lambda p: jax.value_and_grad(local_loss)(p, batch),
                 params, tau, pcfg.local_lr)
         # step-folded key: randomized attacks draw fresh noise each step
-        atk_key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        atk_key = jax.random.fold_in(atk_base, step)
         if fsdp:
             # gradients of sharded leaves arrive already robustly reduced
             # (the gathers' backward IS the robust reduce-scatter); only
@@ -424,12 +448,41 @@ def make_train_step(
             ospec = pspec
     else:
         pspec, ospec = rep, rep
+    return StepBody(body=body, pspec=pspec, ospec=ospec,
+                    batch_spec=batch_spec, waxes=waxes)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    mesh,
+    opt: Optimizer,
+    attack: Optional[AttackConfig] = None,
+):
+    """Returns jit'd ``train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)`` with robust aggregation over workers.
+
+    ``attack`` may be any repro.attacks registry name via the
+    AttackConfig shim; the attack's declared gradient-access level is
+    validated against the collective strategy at build time
+    (:func:`make_step_body`) rather than deep inside the traced
+    collective: the chunked/psum strategy never materializes per-worker
+    rows, so omniscient attacks (mimic, max_damage_tm, ...) need
+    gather/bucketed.
+    """
+    sb = make_step_body(cfg, pcfg, mesh, opt, attack)
+
+    def step(params, opt_state, batch, step_idx):
+        # fixed attack-key base: bit-identical to the pre-StepBody path
+        return sb.body(params, opt_state, batch, step_idx, jax.random.PRNGKey(0))
+
+    rep = P()
     smapped = jax.shard_map(
-        body,
+        step,
         mesh=mesh,
-        in_specs=(pspec, ospec, batch_spec, rep),
-        out_specs=(pspec, ospec, rep),
-        axis_names=frozenset(waxes),
+        in_specs=(sb.pspec, sb.ospec, sb.batch_spec, rep),
+        out_specs=(sb.pspec, sb.ospec, rep),
+        axis_names=frozenset(sb.waxes),
         check_vma=False,
     )
     return jax.jit(smapped, donate_argnums=(0, 1))

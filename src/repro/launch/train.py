@@ -1,104 +1,111 @@
-"""Training driver: Byzantine-robust distributed LM training.
+"""Training CLI: Byzantine-robust distributed LM training at speed.
 
-Runs a real training loop on whatever devices exist (CPU debug mesh by
-default — set XLA_FLAGS=--xla_force_host_platform_device_count=N first for
-a multi-worker simulation). On a TPU pod this same driver runs with
+The CLI front-end of ``launch.trainer``: a donated device-steps window
+harness (zero host syncs inside a window) over ``steps.make_step_body``
+— robust aggregation fused into the sharded train step, engine attacks
+applied in-step with per-micro-step key folding.
+
+Runs on whatever devices exist (CPU debug mesh by default — set
+XLA_FLAGS=--xla_force_host_platform_device_count=N first for a
+multi-worker simulation); on a TPU pod the same driver runs with
 ``--mesh single|multi`` production meshes.
 
-Example (8 simulated devices, 4 workers × 2-way model parallel, one
-Byzantine worker sending sign-flipped gradients, median aggregation):
+Example (8 simulated devices, 8 data-parallel workers, two Byzantine
+workers running ALIE, bucketed median aggregation, 16-step windows):
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
-      --steps 20 --workers 4 --model-par 2 \
-      --attack sign_flip --attack-alpha 0.25 --agg median
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.train --config llama3.2-3b --smoke \\
+      --steps 64 --device-steps 16 --workers 8 \\
+      --strategy bucketed --agg median --attack alie --attack-alpha 0.25
 """
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save as save_ckpt
-from repro.configs import ParallelConfig, get_config, get_smoke_config
+from repro.configs import ParallelConfig, TrainConfig, get_config, get_smoke_config
 from repro.core.attacks import AttackConfig
-from repro.data.pipeline import DataConfig, host_to_mesh, make_lm_batch
-from repro.launch import steps
-from repro.launch.mesh import make_debug_mesh, make_production_mesh, num_workers, worker_axes
-from repro.models import transformer as T
-from repro.optim.optimizers import get_optimizer
+from repro.data.pipeline import DataConfig
+from repro.launch import trainer
+from repro.launch.mesh import make_debug_mesh, make_production_mesh, num_workers
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.train",
+        description="Robust distributed training via the device-steps "
+                    "window harness (launch.trainer)")
+    ap.add_argument("--config", "--arch", dest="config", required=True,
+                    help="architecture name from repro.configs")
     ap.add_argument("--smoke", action="store_true", help="use the reduced config")
-    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=16,
+                    help="total optimizer steps (multiple of --device-steps)")
+    ap.add_argument("--device-steps", type=int, default=1,
+                    help="micro-steps scanned on-device per host round-trip")
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--mesh", default="debug", choices=["debug", "single", "multi"])
     ap.add_argument("--workers", type=int, default=4, help="debug mesh data axis")
-    ap.add_argument("--model-par", type=int, default=2, help="debug mesh model axis")
+    ap.add_argument("--model-par", type=int, default=1, help="debug mesh model axis")
+    ap.add_argument("--strategy", default="gather",
+                    choices=["gather", "bucketed", "hierarchical", "chunked", "psum"])
     ap.add_argument("--agg", default="median",
                     choices=["mean", "median", "trimmed_mean",
                              "approx_median", "approx_trimmed_mean"])
     ap.add_argument("--beta", type=float, default=0.25)
-    ap.add_argument("--strategy", default="gather", choices=["gather", "bucketed", "hierarchical", "chunked"])
     ap.add_argument("--attack", default="none")
     ap.add_argument("--attack-alpha", type=float, default=0.0)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--attn-chunk", type=int, default=0, help="0 = plain attention")
+    ap.add_argument("--log-every", type=int, default=1, help="in windows")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--log-every", type=int, default=1)
-    args = ap.parse_args(argv)
+    return ap
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    cfg = get_smoke_config(args.config) if args.smoke else get_config(args.config)
     if args.mesh == "debug":
         mesh = make_debug_mesh(args.workers, args.model_par)
     else:
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
     m = num_workers(mesh)
-    waxes = worker_axes(mesh)
-    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} workers={m}")
+    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} workers={m} "
+          f"device_steps={args.device_steps}")
 
     attack = AttackConfig(args.attack, args.attack_alpha)
+    if args.strategy == "psum" and args.agg != "mean":
+        # psum is the plain-DP baseline; it can only average
+        print(f"note: --strategy psum forces --agg mean (was {args.agg})")
+        args.agg = "mean"
     pcfg = ParallelConfig(agg_method=args.agg, agg_beta=args.beta,
                           agg_strategy=args.strategy, remat=True,
                           attn_chunk=args.attn_chunk)
-    opt = get_optimizer(args.optimizer, args.lr)
+    tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr, steps=args.steps,
+                       seed=args.seed, attack=args.attack,
+                       attack_alpha=args.attack_alpha,
+                       device_steps=args.device_steps)
+    dcfg = DataConfig(kind="lm", vocab=cfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.global_batch, num_workers=m,
+                      seed=args.seed)
 
-    key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
-        params = T.init_params(cfg, key)
-        pshard = steps.param_shardings(cfg, mesh)
-        params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, pshard)
-        opt_state = opt.init(params)
-        train_step = steps.make_train_step(cfg, pcfg, mesh, opt, attack)
+    def on_window(w, met):
+        print(f"step {met['step']:5d}  loss {met['loss']:.4f}  "
+              f"|g| {met['grad_norm']:.3f}")
 
-        dcfg = DataConfig(kind="lm", vocab=cfg.vocab, seq_len=args.seq_len,
-                          global_batch=args.global_batch, num_workers=m)
-        for step in range(args.steps):
-            batch = make_lm_batch(dcfg, step, attack)
-            if cfg.frontend != "none":
-                batch["frontend"] = jax.random.normal(
-                    jax.random.fold_in(key, step),
-                    (args.global_batch, cfg.n_frontend_tokens, cfg.d_model),
-                ).astype(jnp.dtype(cfg.dtype))
-            batch = host_to_mesh(batch, mesh, waxes)
-            t0 = time.time()
-            params, opt_state, metrics = train_step(params, opt_state, batch, jnp.int32(step))
-            if step % args.log_every == 0:
-                loss = float(metrics["loss"])
-                gn = float(metrics["grad_norm"])
-                print(f"step {step:4d}  loss {loss:.4f}  |g| {gn:.3f}  {time.time()-t0:.2f}s")
-
-        if args.ckpt:
-            save_ckpt(args.ckpt, {"params": params}, step=args.steps,
-                      extra={"arch": cfg.name, "agg": args.agg})
-            print(f"saved checkpoint to {args.ckpt}")
+    result = trainer.train_loop(cfg, pcfg, tcfg, mesh, dcfg=dcfg, attack=attack,
+                                log_every=args.log_every, on_window=on_window)
+    print(f"done: {result.steps} steps in windows of {result.device_steps}  "
+          f"compile {result.compile_s:.2f}s  "
+          f"steady {result.steps_per_s:.2f} steps/s  "
+          f"{result.tokens_per_s:.0f} tokens/s")
+    if args.ckpt:
+        save_ckpt(args.ckpt, {"params": result.state["params"]}, step=result.steps,
+                  extra={"arch": cfg.name, "agg": args.agg,
+                         "strategy": args.strategy})
+        print(f"saved checkpoint to {args.ckpt}")
     return 0
 
 

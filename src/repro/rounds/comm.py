@@ -126,6 +126,12 @@ register_strategy(StrategySpec(
     bytes_fn=lambda d, m, b, nbins: (2 + 2 * nbins) * d * b,
     summary="histogram sketch via psum; no per-worker rows ever gathered",
 ))
+register_strategy(StrategySpec(
+    "psum", exact=True, max_access=attack_base.STATS,
+    bytes_formula="≈2·|g|",
+    bytes_fn=lambda d, m, b, nbins: 2 * d * b,
+    summary="plain all-reduce mean — NO robustness; the throughput baseline",
+))
 
 
 def validate_attack_strategy(attack, strategy: str) -> None:

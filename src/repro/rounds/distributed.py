@@ -81,6 +81,10 @@ def aggregate_by_strategy(
         return distributed.robust_chunked_agg(
             g, axis_names, method, beta, attack, agg_dtype, nbins=nbins,
             attack_key=attack_key)
+    if strategy == "psum":
+        return distributed.robust_psum_agg(
+            g, axis_names, method, beta, attack, agg_dtype,
+            attack_key=attack_key)
     if strategy == "hierarchical":
         if len(axis_names) != 2:
             raise ValueError(
@@ -91,7 +95,7 @@ def aggregate_by_strategy(
             attack_key=attack_key)
     raise ValueError(
         f"unknown agg strategy {strategy!r}; round-level strategies: "
-        "gather|bucketed|chunked|hierarchical")
+        "gather|bucketed|chunked|psum|hierarchical")
 
 
 def scan_local_sgd(value_and_grad_fn, w, tau: int, eta):

@@ -52,11 +52,14 @@ def test_dryrun_records_roofline_fields():
 def test_docs_exist_and_reference_sections():
     for name, needles in {
         "DESIGN.md": ["Arch-applicability", "Pallas kernel", "robust reduce-scatter",
-                      "Communication rounds", "Asynchronous rounds"],
+                      "Communication rounds", "Asynchronous rounds",
+                      "Training harness", "device_steps"],
         "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis",
-                           "§Communication", "§Asynchronous"],
+                           "§Communication", "§Asynchronous",
+                           "§Training throughput", "BENCH_train.json"],
         "README.md": ["bucketed", "fsdp", "Communication efficiency",
-                      "one_round_rate", "async-buffer", "effective-m"],
+                      "one_round_rate", "async-buffer", "effective-m",
+                      "repro.launch.train", "--device-steps"],
     }.items():
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), name

@@ -486,3 +486,59 @@ for k in oa:
                                rtol=1e-5, atol=1e-6)
 print("OK")
 """)
+
+
+def test_psum_agg_plain_mean_baseline():
+    """The psum strategy (the throughput-gate baseline) must be an EXACT
+    mean — one all-reduce per leaf, attacks simulated row-free like the
+    chunked strategy — and must reject any order-statistic method (a
+    psum cannot compute a median; failing loudly keeps the baseline
+    honest)."""
+    run_sub(SMAP + """
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(7)
+ga = rng.standard_normal((8, 37)).astype(np.float32)
+gb = rng.standard_normal((8, 3, 5)).astype(np.float32)
+
+def mk(attack=None):
+    def body(a, b):
+        return distributed.robust_psum_agg({"a": a[0], "b": b[0]}, ("data",),
+                                           "mean", attack=attack)
+    return smap(body, mesh, (P("data"), P("data")), P())
+
+out = mk()(jnp.asarray(ga), jnp.asarray(gb))
+np.testing.assert_allclose(np.asarray(out["a"]), ga.mean(0), rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(np.asarray(out["b"]), gb.mean(0), rtol=1e-5, atol=1e-6)
+
+# the attack flows through the all-reduce undefended (that's the point
+# of the baseline): sign_flip shifts the mean, and matches the oracle
+# computed from the same row-free formula via the gather strategy
+atk = AttackConfig("sign_flip", alpha=0.25, scale=5.0)
+oa = mk(atk)(jnp.asarray(ga), jnp.asarray(gb))
+assert not np.allclose(np.asarray(oa["a"]), ga.mean(0))
+
+def gather_mean(a, b):
+    return distributed.robust_gather_agg({"a": a[0], "b": b[0]}, ("data",),
+                                         "mean", attack=atk)
+og = smap(gather_mean, mesh, (P("data"), P("data")), P())(
+    jnp.asarray(ga), jnp.asarray(gb))
+for k in oa:
+    np.testing.assert_allclose(np.asarray(oa[k]), np.asarray(og[k]),
+                               rtol=1e-5, atol=1e-6)
+
+# exactly one all-reduce (psum) per leaf, no gathers
+jaxpr = str(jax.make_jaxpr(mk())(jnp.asarray(ga), jnp.asarray(gb)))
+assert jaxpr.count("psum") == 2, jaxpr.count("psum")
+assert "all_gather" not in jaxpr and "all_to_all" not in jaxpr
+print("OK")
+""")
+
+
+def test_psum_agg_rejects_order_statistics():
+    import jax.numpy as jnp
+    import pytest as _pytest
+
+    from repro.core import distributed as dist
+
+    with _pytest.raises(ValueError, match="plain data-parallel"):
+        dist.robust_psum_agg({"w": jnp.ones((4,))}, ("data",), "median")

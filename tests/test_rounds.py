@@ -111,7 +111,7 @@ class TestCommAccounting:
     def test_registry_covers_docs_and_dispatch(self):
         names = set(comm.registered_strategies())
         # every ParallelConfig.agg_strategy value + the fsdp backward path
-        assert {"gather", "bucketed", "chunked", "hierarchical", "rs"} == names
+        assert {"gather", "bucketed", "chunked", "psum", "hierarchical", "rs"} == names
 
     def test_unknown_strategy_raises(self):
         with pytest.raises(ValueError, match="unknown strategy"):

@@ -4,36 +4,52 @@ The grid the ROADMAP's communication axis is judged by: robust
 local-update GD (repro.rounds) at τ ∈ {1, 4, 16, ∞} local steps per
 round — τ=1 is Algorithm 1, τ=∞ the one-round algorithm (the paper's
 Table 4 setting is the ∞ column) — crossed with the collective
-strategies (byte accounting from rounds.comm.CommBudget) and the attack
+strategies (byte accounting from rounds.comm.CommBudget), the
+rounds.compression codecs on the transmitted payloads, and the attack
 engine, on the paper's Proposition-1 strongly convex quadratic.
 
-Two gate families (CI: part of ``scripts/ci.sh bench``; the committed
+Three gate families (CI: part of ``scripts/ci.sh bench``; the committed
 grid is BENCH_comm.json, diffed per cell by scripts/bench_diff.py):
 
 - **theory**: every cell's final error must stay within its
   core/theory.py statistical-rate bound — ``delta_median`` (eq. 3) for
-  finite τ, ``one_round_rate`` (Theorem 7) for τ=∞ — with calibrated
-  constants, exactly the ROBUSTNESS.json gating style.
-- **bytes**: at the fixed target error (the one-round estimator's
-  error — "Algorithm-2 quality"), local-update rounds with FINITE
-  τ ≥ 4 must communicate ≥ ``SAVINGS_FLOOR``× fewer total bytes than
-  τ=1 robust GD under the ALIE attack (τ=∞ reaches the target in one
-  round by construction and is reported, not gated).  bytes(total) =
-  bytes/round × rounds-to-target; bytes/round comes from the strategy's
-  CommBudget formula, so the saving is the round-count ratio — the
-  whole point of trading local computation for communication rounds.
+  finite τ, ``one_round_rate`` (Theorem 7) for τ=∞, each scaled by the
+  compression scheme's declared rate penalty via the ``*_compressed``
+  bounds — with calibrated constants, exactly the ROBUSTNESS.json
+  gating style.
+- **bytes (τ)**: at the fixed target error (the UNCOMPRESSED one-round
+  estimator's error — "Algorithm-2 quality"), local-update rounds with
+  FINITE τ ≥ 4 must communicate ≥ ``SAVINGS_FLOOR``× fewer total bytes
+  than τ=1 robust GD under the ALIE attack (τ=∞ reaches the target in
+  one round by construction and is reported, not gated).  bytes(total)
+  = bytes/round × rounds-to-target; bytes/round comes from the
+  strategy's CommBudget formula, so the saving is the round-count
+  ratio — the whole point of trading local computation for rounds.
+- **bytes (codec)**: under ALIE, int8 quantization must reach the SAME
+  target on ≥ ``INT8_SAVINGS_FLOOR``× fewer bytes than the uncompressed
+  run at the best finite τ — the compression axis must stack ON TOP of
+  the τ savings, not trade against them (int8 is unbiased, so its
+  round count matches uncompressed while every round costs ~0.25×).
+
+Compression × τ=∞ caveat: only single-shot-unbiased codecs (none,
+int8) get a τ=∞ column.  topk's error feedback needs a next round to
+replay the residual into, and count_sketch's unbiasedness comes from
+per-round hash rotation — both are undefined-for-purpose with exactly
+one round, so those cells are omitted rather than reported ungated.
 
 Error trajectories come from the single-host reference
 (``local_update_gd`` / ``one_round``), which computes the exact
 estimator every strategy reproduces (the chunked sketch's ≤ one-bin
 deviation is validated separately in test_fed/test_distributed); the
-strategy axis of the grid varies the BYTE accounting only.
+strategy axis of the grid varies the BYTE accounting only.  The
+compression axis changes BOTH: the decoded payloads perturb the
+trajectory and the codec's ratio scales the bytes.
 
 CLI::
 
     PYTHONPATH=src python -m benchmarks.comm_efficiency --smoke --json BENCH_comm.json
 
-exits non-zero iff any gated cell violates its bound or the byte-saving
+exits non-zero iff any gated cell violates its bound or a byte-saving
 floor fails.
 """
 from __future__ import annotations
@@ -58,6 +74,7 @@ from repro.rounds import (
     one_round,
     quadratic_local_solver,
 )
+from repro.rounds import compression as comp_lib
 
 INF = "inf"  # the one-round (tau -> infinity) column
 
@@ -77,11 +94,22 @@ K_ONE_ROUND = 2.0  # tau=inf cells vs sigma*sqrt(d)*one_round_rate (Thm 7)
 # individually gated.
 SAVINGS_FLOOR = 4.0
 
+# Codec byte gate (acceptance criterion): int8's best-finite-tau
+# bytes-to-target under ALIE must undercut uncompressed by >= 3x.  The
+# structural value is ~3.94x (unbiased codec => same round count, wire
+# ratio 0.254 from the int8 bytes model), so 3.0 leaves margin for the
+# quantization noise costing a round or two near the target.
+INT8_SAVINGS_FLOOR = 3.0
+
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     taus: Tuple = (1, 4, 16, INF)
     strategies: Tuple[str, ...] = ("gather", "bucketed", "chunked")
+    # payload codecs (rounds.compression registry); topk/count_sketch
+    # get finite-tau cells only — see the module docstring's tau=inf
+    # caveat
+    compressions: Tuple[str, ...] = ("none", "int8", "topk", "count_sketch")
     # (name, strength) attack cells; ALIE is the acceptance-gated one
     attacks: Tuple[Tuple[str, float], ...] = (
         ("none", 1.0), ("alie", 1.5), ("sign_flip", 10.0))
@@ -116,13 +144,26 @@ def _attack_cfg(name: str, strength: float, alpha: float) -> Optional[AttackConf
     return AttackConfig(name, alpha=alpha, strength=strength)
 
 
-def _cell_bound(cfg: CommConfig, tau, alpha: float) -> float:
-    """Theory gate for one (tau, attack-alpha) error cell."""
+def _cell_bound(cfg: CommConfig, tau, alpha: float, comp: str) -> float:
+    """Theory gate for one (tau, attack-alpha, compression) error cell:
+    the uncompressed statistical-rate bound times the codec's declared
+    rate penalty (theory's ``*_compressed`` forms; penalty 1.0 for
+    'none' reduces them to the original bounds bit-for-bit)."""
+    pen = comp_lib.get_compression(comp).rate_penalty
     if tau == INF:
         return K_ONE_ROUND * cfg.sigma * jnp.sqrt(cfg.d).item() * \
-            theory.one_round_rate(alpha, cfg.n, cfg.m)
-    return K_MEDIAN_COMM * theory.delta_median(
-        alpha, cfg.n, cfg.m, cfg.d, V=cfg.sigma, S=3.0)
+            theory.one_round_rate_compressed(alpha, cfg.n, cfg.m, pen)
+    return K_MEDIAN_COMM * theory.delta_median_compressed(
+        alpha, cfg.n, cfg.m, cfg.d, V=cfg.sigma, S=3.0, rate_penalty=pen)
+
+
+def _inf_supported(comp: str) -> bool:
+    """Whether a codec gets a tau=inf (one-round) cell: error feedback
+    has no next round to replay its residual into, and per-round hash
+    rotation (shared_key) averages to unbiased only ACROSS rounds — a
+    single shot keeps the full sketch distortion."""
+    spec = comp_lib.get_compression(comp)
+    return not (spec.error_feedback or spec.shared_key)
 
 
 def _rounds_to(errs, target: float) -> Optional[int]:
@@ -134,69 +175,85 @@ def _rounds_to(errs, target: float) -> Optional[int]:
 
 
 def evaluate(cfg: CommConfig = CommConfig(), verbose: bool = False) -> dict:
-    """Run the (tau x strategy x attack) grid; returns the JSON payload."""
+    """Run the (tau x strategy x compression x attack) grid; returns the
+    JSON payload."""
     shards, w_star = _make_data(cfg)
     w0 = jnp.zeros((cfg.d,))
     traj = lambda w: jnp.linalg.norm(w - w_star)  # noqa: E731
 
-    # error trajectories per (tau, attack) — strategy-independent
+    # error trajectories per (tau, attack, compression) — strategy-
+    # independent (the strategy axis only prices bytes)
     curves = {}
     for name, strength in cfg.attacks:
         atk = _attack_cfg(name, strength, cfg.alpha)
-        for tau in cfg.taus:
-            if tau == INF:
-                solver = (quadratic_local_solver if cfg.solver_steps == 0 else
-                          _gd_solver(cfg, w0))
-                w = one_round(solver, shards, OneRoundConfig(cfg.method),
-                              attack=atk)
-                curves[(tau, name)] = [float(traj(w))]
-            else:
-                lcfg = LocalUpdateConfig(
-                    method=cfg.method, step_size=cfg.step_size, tau=tau,
-                    num_rounds=-(-cfg.num_rounds // tau))
-                _, errs = local_update_gd(linreg_loss, w0, shards, lcfg, atk, traj)
-                curves[(tau, name)] = [float(e) for e in errs]
+        for comp in cfg.compressions:
+            for tau in cfg.taus:
+                if tau == INF:
+                    if not _inf_supported(comp):
+                        continue
+                    solver = (quadratic_local_solver if cfg.solver_steps == 0
+                              else _gd_solver(cfg, w0))
+                    w = one_round(solver, shards, OneRoundConfig(cfg.method),
+                                  attack=atk, compression=comp)
+                    curves[(tau, name, comp)] = [float(traj(w))]
+                else:
+                    lcfg = LocalUpdateConfig(
+                        method=cfg.method, step_size=cfg.step_size, tau=tau,
+                        num_rounds=-(-cfg.num_rounds // tau),
+                        compression=comp)
+                    _, errs = local_update_gd(linreg_loss, w0, shards, lcfg,
+                                              atk, traj)
+                    curves[(tau, name, comp)] = [float(e) for e in errs]
 
-    records, violations = [], []
+    records = []
     gates = []
     for name, strength in cfg.attacks:
         alpha = cfg.alpha if name != "none" else 0.0
-        # fixed target error: one-round ("Algorithm 2") quality for this
-        # attack cell — every tau is measured by the bytes it needs to
-        # match it
-        target = curves[(INF, name)][0]
-        rounds_to = {tau: _rounds_to(curves[(tau, name)], target)
-                     for tau in cfg.taus}
+        # fixed target error: the UNCOMPRESSED one-round ("Algorithm 2")
+        # quality for this attack cell — every (tau, compression) pair is
+        # measured by the bytes it needs to match it, so codecs compete
+        # at matched error instead of each against a softer target
+        target = curves[(INF, name, "none")][0]
+        rounds_to = {(tau, comp): _rounds_to(curves[(tau, name, comp)], target)
+                     for comp in cfg.compressions for tau in cfg.taus
+                     if (tau, name, comp) in curves}
         for strategy in cfg.strategies:
-            budget = CommBudget(strategy=strategy, num_params=cfg.d, m=cfg.m,
-                                nbins=cfg.nbins)
-            for tau in cfg.taus:
-                errs = curves[(tau, name)]
-                err = errs[-1]
-                bound = float(_cell_bound(cfg, tau, alpha))
-                rt = rounds_to[tau]
-                records.append({
-                    "tau": tau, "strategy": strategy, "attack": name,
-                    "alpha": alpha, "strength": strength,
-                    "rounds": len(errs), "err": err,
-                    "bound": bound, "gated": True, "ok": err <= bound,
-                    "target_err": target,
-                    "rounds_to_target": rt,
-                    "bytes_per_round": budget.bytes_per_round,
-                    "bytes_to_target": (None if rt is None
-                                        else rt * budget.bytes_per_round),
-                })
-        # byte-saving gate per attack: best FINITE tau >= 4 vs tau=1.
-        # One gate per attack, NOT per strategy — bytes/round is the same
-        # for every tau under a fixed strategy, so the saving is the
-        # strategy-independent round-count ratio.  tau=inf is excluded on
-        # purpose: the target IS the one-round error, so its rounds-to-
-        # target is 1 by construction and including it would make the
-        # gate vacuous; its bytes_to_target is still reported per record.
-        base = rounds_to[1]
-        best_hi = min((rounds_to[t] for t in cfg.taus
+            for comp in cfg.compressions:
+                budget = CommBudget(strategy=strategy, num_params=cfg.d,
+                                    m=cfg.m, nbins=cfg.nbins,
+                                    compression=comp)
+                for tau in cfg.taus:
+                    if (tau, name, comp) not in curves:
+                        continue
+                    errs = curves[(tau, name, comp)]
+                    err = errs[-1]
+                    bound = float(_cell_bound(cfg, tau, alpha, comp))
+                    rt = rounds_to[(tau, comp)]
+                    records.append({
+                        "tau": tau, "strategy": strategy, "attack": name,
+                        "compression": comp,
+                        "alpha": alpha, "strength": strength,
+                        "rounds": len(errs), "err": err,
+                        "bound": bound, "gated": True, "ok": err <= bound,
+                        "target_err": target,
+                        "rounds_to_target": rt,
+                        "bytes_per_round": budget.bytes_per_round,
+                        "bytes_to_target": (None if rt is None
+                                            else rt * budget.bytes_per_round),
+                    })
+        # byte-saving gate per attack: best FINITE tau >= 4 vs tau=1,
+        # on the UNCOMPRESSED curves (the tau axis's own gate — the
+        # codec axis is gated separately below).  One gate per attack,
+        # NOT per strategy — bytes/round is the same for every tau under
+        # a fixed strategy, so the saving is the strategy-independent
+        # round-count ratio.  tau=inf is excluded on purpose: the target
+        # IS the one-round error, so its rounds-to-target is 1 by
+        # construction and including it would make the gate vacuous; its
+        # bytes_to_target is still reported per record.
+        base = rounds_to[(1, "none")]
+        best_hi = min((rounds_to[(t, "none")] for t in cfg.taus
                        if isinstance(t, int) and t >= 4
-                       and rounds_to[t] is not None),
+                       and rounds_to[(t, "none")] is not None),
                       default=None)
         saving = (None if base is None or best_hi is None
                   else base / best_hi)
@@ -207,14 +264,44 @@ def evaluate(cfg: CommConfig = CommConfig(), verbose: bool = False) -> dict:
             "ok": (name != "alie") or (saving is not None
                                        and saving >= SAVINGS_FLOOR),
         })
+        # codec byte-saving gate per attack: int8's cheapest finite-tau
+        # route to the target vs uncompressed's, in TOTAL bytes (round
+        # count x compressed bytes/round).  Strategy-independent for the
+        # same reason as above — the codec ratio multiplies every
+        # strategy's bytes/round uniformly — so it is priced once, on
+        # the first strategy.
+        if "int8" in cfg.compressions:
+            bpr = {comp: CommBudget(strategy=cfg.strategies[0],
+                                    num_params=cfg.d, m=cfg.m,
+                                    nbins=cfg.nbins,
+                                    compression=comp).bytes_per_round
+                   for comp in ("none", "int8")}
+            best_bytes = {}
+            for comp in ("none", "int8"):
+                best_bytes[comp] = min(
+                    (rounds_to[(t, comp)] * bpr[comp] for t in cfg.taus
+                     if isinstance(t, int)
+                     and rounds_to[(t, comp)] is not None),
+                    default=None)
+            csaving = (None if best_bytes["none"] is None
+                       or best_bytes["int8"] is None
+                       else best_bytes["none"] / best_bytes["int8"])
+            gates.append({
+                "attack": name,
+                "bytes_saving_int8_vs_none": csaving,
+                "floor": INT8_SAVINGS_FLOOR,
+                "ok": (name != "alie") or (csaving is not None
+                                           and csaving >= INT8_SAVINGS_FLOOR),
+            })
     # err/bound are strategy-independent (the strategy axis only prices
-    # bytes), so dedupe violations by (tau, attack) — one entry per real
-    # defect, not one per strategy copy of the record
+    # bytes), so dedupe violations by (tau, attack, compression) — one
+    # entry per real defect, not one per strategy copy of the record
     seen = set()
     violations = []
     for r in records:
-        if not r["ok"] and (r["tau"], r["attack"]) not in seen:
-            seen.add((r["tau"], r["attack"]))
+        key = (r["tau"], r["attack"], r["compression"])
+        if not r["ok"] and key not in seen:
+            seen.add(key)
             violations.append(r)
     failed_gates = [g for g in gates if not g["ok"]]
     out = {
@@ -232,13 +319,20 @@ def evaluate(cfg: CommConfig = CommConfig(), verbose: bool = False) -> dict:
                 continue  # error columns repeat across strategies
             gate = "VIOLATION" if not r["ok"] else f"<= {r['bound']:.3f}"
             print(f"  tau={str(r['tau']):>4s} {r['attack']:10s} "
+                  f"comp={r['compression']:12s} "
                   f"err={r['err']:8.4f} [{gate}]  rounds_to_target="
                   f"{r['rounds_to_target']}")
         for g in gates:
-            s = g["bytes_saving_tau_ge_4"]
-            print(f"  bytes saving tau>=4 vs tau=1 [{g['attack']:10s}]: "
+            if "bytes_saving_tau_ge_4" in g:
+                s = g["bytes_saving_tau_ge_4"]
+                label = "bytes saving tau>=4 vs tau=1"
+            else:
+                s = g["bytes_saving_int8_vs_none"]
+                label = "bytes saving int8 vs none"
+            print(f"  {label} [{g['attack']:10s}]: "
                   f"{s if s is None else round(s, 2)}x "
-                  f"(floor {g['floor']}x{' — gated' if g['attack'] == 'alie' else ''})")
+                  f"(floor {g['floor']}x"
+                  f"{' — gated' if g['attack'] == 'alie' else ''})")
     return out
 
 
@@ -264,7 +358,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.comm_efficiency",
         description="error-vs-communicated-bytes grid: tau x strategy x "
-                    "attack, theory- and byte-saving-gated")
+                    "compression x attack, theory- and byte-saving-gated")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid (smaller n/d, shorter rounds)")
     ap.add_argument("--json", nargs="?", const="BENCH_comm.json", default=None,
@@ -286,12 +380,15 @@ def main(argv=None) -> int:
               file=sys.stderr)
     rc = 0
     for c in out["violations"]:
-        print(f"GATE comm/theory: tau={c['tau']} {c['attack']}: err "
+        print(f"GATE comm/theory: tau={c['tau']} {c['attack']} "
+              f"comp={c['compression']}: err "
               f"{c['err']:.4f} > bound {c['bound']:.4f}", file=sys.stderr)
         rc = 1
     for g in out["failed_gates"]:
-        print(f"GATE comm/bytes: {g['attack']}: saving "
-              f"{g['bytes_saving_tau_ge_4']} < {g['floor']}x", file=sys.stderr)
+        s = g.get("bytes_saving_tau_ge_4", g.get("bytes_saving_int8_vs_none"))
+        kind = ("tau" if "bytes_saving_tau_ge_4" in g else "int8")
+        print(f"GATE comm/bytes[{kind}]: {g['attack']}: saving "
+              f"{s} < {g['floor']}x", file=sys.stderr)
         rc = 1
     return rc
 

@@ -16,11 +16,12 @@ additionally fails the run if the pruned selection network falls below
 below 1.0 so shared-runner timing noise can't fail the build).
 
 ``--json-comm [PATH]`` writes the comm-efficiency grid (tau × strategy
-× attack: error, theory bound, bytes-to-target — see
-benchmarks/comm_efficiency.py) to PATH (default BENCH_comm.json); the
-comm suite ALWAYS gates (theory bounds + the ≥4× byte-saving floor
-under ALIE) — its gates are deterministic statistics, not wall-clock
-timings, so there is no noise margin to waive.
+× compression × attack: error, codec-scaled theory bound,
+bytes-to-target — see benchmarks/comm_efficiency.py) to PATH (default
+BENCH_comm.json); the comm suite ALWAYS gates (theory bounds + the ≥4×
+tau byte-saving floor and the ≥3× int8 codec byte-saving floor under
+ALIE) — its gates are deterministic statistics, not wall-clock timings,
+so there is no noise margin to waive.
 
 ``--json-async [PATH]`` writes the buffered-async throughput grid
 (attack × k/m × dropout: error, effective-m theory bound, simulated

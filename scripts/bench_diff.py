@@ -12,9 +12,10 @@ Handles both artifact schemas, keyed off the payload's ``suite`` field:
 
 - ``agg``  (BENCH_agg.json)  — (op, m, d) cases: µs/call + speedup
   vs the XLA-sort baseline (timing, noisy on shared runners);
-- ``comm`` (BENCH_comm.json) — (tau, strategy, attack) cells: final
-  error, theory bound, rounds/bytes to the fixed target error
-  (deterministic statistics — any delta is a real behaviour change);
+- ``comm`` (BENCH_comm.json) — (tau, strategy, compression, attack)
+  cells: final error, theory bound, rounds/bytes to the fixed target
+  error (deterministic statistics — any delta is a real behaviour
+  change; pre-compression baselines key as compression='none');
 - ``async`` (BENCH_async.json) — (attack, k/m, dropout) cells: final
   error + simulated round time and the speedup vs the k = m sync
   column (also deterministic — the clock is the seeded arrival model);
@@ -68,29 +69,34 @@ def _diff_agg(base: dict, new: dict) -> None:
 
 def _diff_comm(base: dict, new: dict) -> None:
     def index(payload):
-        return {(str(r["tau"]), r["strategy"], r["attack"]): r
+        # compression landed after the first committed baselines — key
+        # pre-compression records as their 'none' cells so the diff
+        # lines up instead of reporting a full grid swap
+        return {(str(r["tau"]), r["strategy"],
+                 r.get("compression", "none"), r["attack"]): r
                 for r in payload.get("records", [])}
 
     base, new = index(base), index(new)
     print("### Comm-efficiency grid vs committed baseline")
     print()
-    print("| tau | strategy | attack | base err | new err | err Δ | "
-          "base bytes→target | new bytes→target |")
-    print("|---|---|---|---|---|---|---|---|")
+    print("| tau | strategy | compression | attack | base err | new err | "
+          "err Δ | base bytes→target | new bytes→target |")
+    print("|---|---|---|---|---|---|---|---|---|")
     def tau_order(k):
         tau = k[0]
-        return (k[1], k[2], float("inf") if tau == "inf" else int(tau))
+        return (k[1], k[2], k[3], float("inf") if tau == "inf" else int(tau))
 
     for key in sorted(new, key=tau_order):
-        tau, strategy, attack = key
+        tau, strategy, comp, attack = key
         nr = new[key]
         br = base.get(key)
         if br is None:
-            print(f"| {tau} | {strategy} | {attack} | — | {nr['err']:.4f} | "
+            print(f"| {tau} | {strategy} | {comp} | {attack} | — | "
+                  f"{nr['err']:.4f} | "
                   f"new case | — | {_fmt(nr.get('bytes_to_target'), ',.0f')} |")
             continue
         derr = nr["err"] - br["err"]
-        print(f"| {tau} | {strategy} | {attack} | {br['err']:.4f} | "
+        print(f"| {tau} | {strategy} | {comp} | {attack} | {br['err']:.4f} | "
               f"{nr['err']:.4f} | {derr:+.4f} | "
               f"{_fmt(br.get('bytes_to_target'), ',.0f')} | "
               f"{_fmt(nr.get('bytes_to_target'), ',.0f')} |")

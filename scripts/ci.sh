@@ -11,9 +11,12 @@
 #                             and FAILS if the pruned selection network
 #                             is slower than 0.7x the XLA-sort median
 #                             baseline at m=32, if any comm cell violates
-#                             its core/theory.py bound, if tau>=4
-#                             local-update rounds save less than 4x bytes
-#                             vs tau=1 under ALIE, if any async cell
+#                             its (codec-scaled) core/theory.py bound, if
+#                             tau>=4 local-update rounds save less than
+#                             4x bytes vs tau=1 under ALIE, if int8
+#                             compression saves less than 3x bytes vs
+#                             uncompressed at matched error under ALIE,
+#                             if any async cell
 #                             breaks its effective-m bound, if the
 #                             k/m=0.5 buffer closes rounds < 2x faster
 #                             than sync under heavy-tailed latency at
@@ -31,10 +34,12 @@
 #                             with the smoke artifact)
 #   scripts/ci.sh docs        registry-generated README tables
 #                             (python -m repro.docs --check): FAILS if the
-#                             attack/aggregator/strategy tables drifted from
-#                             the registries (regenerate: python -m repro.docs)
+#                             attack/aggregator/strategy/compression/policy
+#                             tables drifted from the registries
+#                             (regenerate: python -m repro.docs)
 #   scripts/ci.sh robustness  attack x aggregator x alpha scenario matrix
-#                             plus the buffered-async stale-exploit cells
+#                             plus the compressed-payload codec cells and
+#                             the buffered-async stale-exploit cells
 #                             (repro.attacks.matrix --smoke): writes
 #                             ROBUSTNESS.smoke.json (the committed
 #                             ROBUSTNESS.json is the full grid — don't

@@ -20,6 +20,15 @@ Gate semantics (the CI ``robustness`` job, scripts/ci.sh robustness):
 - cells beyond an aggregator's breakdown point are reported ungated
   (the breakdown behaviour itself is asserted in tests/test_attacks.py).
 
+A second, smaller **compressed** grid (``evaluate_compressed``) reruns
+sign_flip/ALIE cells with each rounds.compression codec on the
+transmitted rows — attacks act on the DECODED wire values — gated
+against the codec-scaled bounds (``theory.delta_median_compressed`` /
+``delta_trimmed_compressed``) with the codec-scaled breakdown ceiling
+(``theory.compressed_breakdown``); a buffered-async grid
+(``evaluate_async``) covers the staleness engine.  Both land in the
+same JSON artifact under ``compressed`` / ``async``.
+
 K_* absorb the paper's universal constants; they are calibrated so a
 healthy reproduction passes with >= ~3x margin while a broken aggregator
 (errors at the scale the attacks induce through ``mean``) fails hard.
@@ -44,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.attacks import base, engine
 from repro.core import aggregators, theory
+from repro.rounds import compression as comp_lib
 
 # (attack name, strength) cells of the default grid — every registered
 # gradient/data attack, at a strength that historically separates robust
@@ -226,6 +236,179 @@ def evaluate(cfg: MatrixConfig = MatrixConfig(), verbose: bool = False) -> dict:
             print(f"  {c['aggregator']:13s} {c['attack']:15s} a={c['alpha']:.2f} "
                   f"m={c['m']:3d} err={min(c['err'], 1e9):10.4f}  [{gate}]")
         print(f"  {len(cells)} cells, {counter[0]} traces, "
+              f"{len(violations)} violations")
+    return out
+
+
+# ------------------------------------------------------ compressed cells
+#
+# Compressed-payload scenario cells: every worker's transmitted gradient
+# passes through a rounds.compression codec BEFORE the attack, so the
+# Byzantine rows replace the DECODED wire values — the adversary also
+# reads its statistics (ALIE mean/std) from the decoded honest rows, the
+# same post-decode parity contract the round engines enforce.  Gated
+# against the codec-scaled bounds (theory.delta_median_compressed /
+# delta_trimmed_compressed); cells whose alpha reaches the codec-scaled
+# breakdown ceiling (theory.compressed_breakdown — count_sketch halves
+# it) are reported ungated, the same regime convention as the sync grid.
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedMatrixConfig:
+    aggregators: Tuple[str, ...] = ("median", "trimmed_mean")
+    compressions: Tuple[str, ...] = ("none", "int8", "topk", "count_sketch")
+    attacks: Tuple[Tuple[str, float], ...] = (("sign_flip", 10.0),
+                                              ("alie", 1.5))
+    alphas: Tuple[float, ...] = (0.05, 0.25)
+    ms: Tuple[int, ...] = (16,)
+    beta: float = 0.3
+    n: int = 256
+    d: int = 32
+    sigma: float = 0.5
+    iters: int = 60
+    lr: float = 0.5
+    seed: int = 0
+
+
+COMPRESSED_SMOKE = CompressedMatrixConfig(n=64, d=16, iters=40)
+
+
+def cell_bound_compressed(agg: str, comp: str, alpha: float, beta: float,
+                          n: int, m: int, d: int,
+                          sigma: float) -> Optional[float]:
+    """Codec-scaled theory bound for one compressed cell; None = ungated
+    (at or beyond the codec-scaled breakdown ceiling)."""
+    spec = comp_lib.get_compression(comp)
+    if agg == "median":
+        if alpha >= theory.compressed_breakdown(0.5, spec.breakdown_scale):
+            return None
+        return K_MEDIAN * theory.delta_median_compressed(
+            alpha, n, m, d, V=sigma, S=3.0, rate_penalty=spec.rate_penalty)
+    if agg == "trimmed_mean":
+        if math.ceil(alpha * m) > math.floor(beta * m):
+            return None  # beyond the trim budget, codec or not
+        if alpha >= theory.compressed_breakdown(beta, spec.breakdown_scale):
+            return None
+        return K_TRIMMED * theory.delta_trimmed_compressed(
+            beta, n, m, d, v=sigma, rate_penalty=spec.rate_penalty)
+    return None
+
+
+def _make_compressed_cell_fn(agg_name: str, comp: str,
+                             cfg: CompressedMatrixConfig, m: int, data,
+                             counter: list):
+    """err = f(attack_idx, alpha, strength, key) for one (aggregator,
+    codec, m): the _make_cell_fn loop with the codec applied to the row
+    stack each round (error-feedback residual in the scan carry) and the
+    attack acting on the decoded rows."""
+    x, y, _, _, w_star = data
+    n = cfg.n
+    agg = aggregators.get_aggregator(agg_name, cfg.beta)
+    atk_specs = [engine.as_attack(name) for name, _ in cfg.attacks]
+    spec = comp_lib.get_compression(comp)
+
+    def grads_of(w):
+        pred = jnp.einsum("mnd,d->mn", x, w)
+        return jnp.einsum("mnd,mn->md", x, pred - y) / n
+
+    def cell(attack_idx, alpha, strength, key):
+        counter[0] += 1  # python side effect: executes once per TRACE
+        mask = engine.byzantine_mask(alpha, m)
+        maskb = mask[:, None]
+
+        def step(carry, r):
+            w, prev, res = carry
+            g = grads_of(w)
+            ckey = jax.random.fold_in(jax.random.PRNGKey(11), r)
+            g, res2 = comp_lib.compress_rows(
+                comp, g,
+                key=ckey if (spec.randomized or spec.shared_key) else None,
+                residual=res if spec.error_feedback else None)
+            if res2 is None:
+                res2 = res
+            mean, var = engine.honest_statistics(g, mask)
+            kr = jax.random.fold_in(key, r)
+
+            def branch_for(atk):
+                def br(_):
+                    ctx = engine.build_context(
+                        atk, m=m, alpha=alpha, strength=strength, mask=mask,
+                        rows=g, own=g, honest_mean=mean, honest_var=var,
+                        key=kr, prev_agg=prev, rnd=r)
+                    return jnp.broadcast_to(atk.payload(ctx), g.shape)
+                return br
+
+            bad = jax.lax.switch(attack_idx,
+                                 [branch_for(a) for a in atk_specs], None)
+            rows = jnp.where(maskb, bad, g)
+            g_agg = agg(rows)
+            w2 = w - cfg.lr * g_agg
+            return (w2, g_agg, res2), None
+
+        w0 = jnp.zeros_like(w_star)
+        res0 = (jnp.zeros((m, cfg.d)) if spec.error_feedback
+                else jnp.zeros((0,)))
+        (w_fin, _, _), _ = jax.lax.scan(
+            step, (w0, w0, res0), jnp.arange(cfg.iters))
+        err = jnp.linalg.norm(w_fin - w_star)
+        return jnp.nan_to_num(err, nan=jnp.inf, posinf=jnp.inf)
+
+    return cell
+
+
+def evaluate_compressed(cfg: CompressedMatrixConfig = CompressedMatrixConfig(),
+                        verbose: bool = False) -> dict:
+    """Run the compressed grid; same payload shape as evaluate()."""
+    counter = [0]
+    cells = []
+    for m in cfg.ms:
+        data = _make_data(
+            MatrixConfig(n=cfg.n, d=cfg.d, sigma=cfg.sigma, seed=cfg.seed), m)
+        for agg_name in cfg.aggregators:
+            for comp in cfg.compressions:
+                fn = jax.jit(jax.vmap(_make_compressed_cell_fn(
+                    agg_name, comp, cfg, m, data, counter)))
+                names, idxs, alphas, strengths = ["none"], [0], [0.0], [1.0]
+                for i, (name, s) in enumerate(cfg.attacks):
+                    for a in cfg.alphas:
+                        names.append(name)
+                        idxs.append(i)
+                        alphas.append(a)
+                        strengths.append(s)
+                keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                    jax.random.PRNGKey(cfg.seed + 1), jnp.arange(len(idxs)))
+                errs = fn(jnp.asarray(idxs, jnp.int32),
+                          jnp.asarray(alphas, jnp.float32),
+                          jnp.asarray(strengths, jnp.float32), keys)
+                for name, a, s, e in zip(names, alphas, strengths, errs):
+                    bound = cell_bound_compressed(
+                        agg_name, comp, a, cfg.beta, cfg.n, m, cfg.d,
+                        cfg.sigma)
+                    err = float(e)
+                    cells.append({
+                        "attack": name, "aggregator": agg_name,
+                        "compression": comp, "alpha": a, "m": m,
+                        "strength": s, "err": err, "bound": bound,
+                        "gated": bound is not None,
+                        "ok": bound is None or err <= bound,
+                    })
+    violations = [c for c in cells if not c["ok"]]
+    out = {
+        "task": "linreg-prop1-compressed",
+        "config": dataclasses.asdict(cfg),
+        "num_traces": counter[0],
+        "cells": cells,
+        "violations": violations,
+    }
+    if verbose:
+        for c in cells:
+            gate = ("VIOLATION" if not c["ok"] else
+                    f"<= {c['bound']:.3f}" if c["gated"] else
+                    "ungated (codec breakdown)")
+            print(f"  comp {c['aggregator']:13s} {c['compression']:12s} "
+                  f"{c['attack']:10s} a={c['alpha']:.2f} m={c['m']:3d} "
+                  f"err={min(c['err'], 1e9):10.4f}  [{gate}]")
+        print(f"  {len(cells)} compressed cells, {counter[0]} traces, "
               f"{len(violations)} violations")
     return out
 
@@ -419,22 +602,29 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args(argv)
     cfg = SMOKE if args.smoke else MatrixConfig()
+    ccfg = COMPRESSED_SMOKE if args.smoke else CompressedMatrixConfig()
     acfg = ASYNC_SMOKE if args.smoke else AsyncMatrixConfig()
     if args.seed is not None:
         cfg = dataclasses.replace(cfg, seed=args.seed)
+        ccfg = dataclasses.replace(ccfg, seed=args.seed)
         acfg = dataclasses.replace(acfg, seed=args.seed)
     out = evaluate(cfg, verbose=True)
+    out["compressed"] = evaluate_compressed(ccfg, verbose=True)
     out["async"] = evaluate_async(acfg, verbose=True)
-    violations = out["violations"] + out["async"]["violations"]
+    violations = (out["violations"] + out["compressed"]["violations"]
+                  + out["async"]["violations"])
     if args.json is not None:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.json} ({len(out['cells'])} sync + "
+              f"{len(out['compressed']['cells'])} compressed + "
               f"{len(out['async']['cells'])} async cells)", file=sys.stderr)
     if violations:
         for c in violations:
             where = (f"k={c['k']} drop={c['dropout']}" if "k" in c
                      else f"m={c['m']}")
+            if "compression" in c:
+                where += f" comp={c['compression']}"
             print(f"GATE robustness: {c['aggregator']} x {c['attack']} "
                   f"alpha={c['alpha']} {where}: err {c['err']:.4f} > "
                   f"bound {c['bound']:.4f}", file=sys.stderr)

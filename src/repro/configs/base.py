@@ -113,6 +113,11 @@ class ParallelConfig:
     # §Communication rounds)
     local_steps: int = 1
     local_lr: float = 0.1  # local SGD lr used when local_steps > 1
+    # gradient compression (repro.rounds.compression): codec applied to
+    # each worker's transmitted payload before the collective — attacks
+    # act on the decoded wire values.  Error-feedback schemes (topk)
+    # need the trainer's window state; make_train_step rejects them.
+    compression: str = "none"  # none|int8|topk|count_sketch
 
 
 @dataclasses.dataclass(frozen=True)

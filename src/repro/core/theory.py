@@ -193,6 +193,66 @@ def async_optimal_rate(alpha: float, n: int, m: int, k: int,
     return alpha_eff / math.sqrt(n) + 1.0 / math.sqrt(n * m_eff)
 
 
+# ------------------------------------------------------ compressed rounds
+#
+# A lossy codec between the workers and the robust aggregator (see
+# rounds/compression.py) adds codec distortion on top of the statistical
+# error: quantization noise (int8), sparsification bias absorbed by
+# error feedback (top-k), or hash-collision noise (count sketch).  The
+# related papers ("Communication-efficient Byzantine-robust distributed
+# learning with statistical guarantee", "Securing Distributed Gradient
+# Descent in High Dimensional Statistical Learning") show the compressed
+# estimators keep the SAME rate ORDER with a constant-factor penalty and
+# a (possibly) reduced breakdown point.  We model both as declared
+# per-scheme multipliers — ``rate_penalty`` on the Δ bounds and
+# ``breakdown_scale`` on the usable Byzantine-fraction ceiling — and the
+# compressed benchmark / robustness-matrix cells gate against these
+# compressed bounds, so a scheme whose real distortion exceeds its
+# declaration fails CI.
+
+
+def delta_median_compressed(alpha: float, n: int, m: int, d: int, V: float,
+                            S: float, rate_penalty: float,
+                            eps: float = 1.0 / 6.0,
+                            LhatD: float = 1.0) -> float:
+    """Eq. (3)'s Δ times the compression scheme's declared rate penalty —
+    the bound the compressed median cells gate against."""
+    if rate_penalty < 1.0:
+        raise ValueError(f"rate_penalty must be >= 1, got {rate_penalty}")
+    return rate_penalty * delta_median(alpha, n, m, d, V, S, eps=eps,
+                                       LhatD=LhatD)
+
+
+def delta_trimmed_compressed(beta: float, n: int, m: int, d: int, v: float,
+                             rate_penalty: float, eps: float = 1.0 / 6.0,
+                             LhatD: float = 1.0) -> float:
+    """Eq. (5)'s Δ' times the compression scheme's declared rate penalty."""
+    if rate_penalty < 1.0:
+        raise ValueError(f"rate_penalty must be >= 1, got {rate_penalty}")
+    return rate_penalty * delta_trimmed(beta, n, m, d, v, eps=eps, LhatD=LhatD)
+
+
+def one_round_rate_compressed(alpha: float, n: int, m: int,
+                              rate_penalty: float) -> float:
+    """Theorem 7's one-round rate times the declared compression penalty
+    (the τ=∞ cells of the compressed comm-efficiency grid)."""
+    if rate_penalty < 1.0:
+        raise ValueError(f"rate_penalty must be >= 1, got {rate_penalty}")
+    return rate_penalty * one_round_rate(alpha, n, m)
+
+
+def compressed_breakdown(alpha_max: float, breakdown_scale: float) -> float:
+    """Usable Byzantine-fraction ceiling under compression: the
+    aggregator's own ceiling (1/2 for median, β for trimmed mean) times
+    the scheme's declared breakdown scale.  Cells with alpha at or above
+    this are reported ungated by the compressed matrix — the analogue of
+    the breakdown regime in the uncompressed grid."""
+    if not 0.0 < breakdown_scale <= 1.0:
+        raise ValueError(
+            f"breakdown_scale must be in (0, 1], got {breakdown_scale}")
+    return alpha_max * breakdown_scale
+
+
 def loglog_slope(xs, ys) -> float:
     """OLS slope of log(y) on log(x) — used to check empirical scalings."""
     lx = [math.log(x) for x in xs]

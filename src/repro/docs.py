@@ -1,8 +1,9 @@
 """Registry-generated reference docs: ``python -m repro.docs``.
 
-The attack, aggregator, collective-strategy, and staleness-policy
-tables in README.md are GENERATED from the live registries — the single
-sources of truth every runtime surface already dispatches through:
+The attack, aggregator, collective-strategy, compression, and
+staleness-policy tables in README.md are GENERATED from the live
+registries — the single sources of truth every runtime surface already
+dispatches through:
 
 - attacks:     ``repro.attacks.registered()`` (name, access level,
                behaviour flags incl. arrival timing, default strength,
@@ -12,6 +13,10 @@ sources of truth every runtime surface already dispatches through:
 - strategies:  ``repro.rounds.comm.registered_strategies()`` (name,
                estimator, per-device collective bytes per round, highest
                reproducible attack access level);
+- compression: ``repro.rounds.compression.registered_compressions()``
+               (name, payload bytes model, declared statistical-rate
+               penalty, error-feedback state yes/no — the payload codecs
+               under the CommBudget);
 - policies:    ``repro.fed.staleness.registered_policies()`` (name,
                staleness weight, trim/drop behaviour, default knob/cap —
                the buffered-async staleness policies).
@@ -115,6 +120,24 @@ def strategy_table() -> str:
          "max attack access", "note"), rows)
 
 
+def compression_table() -> str:
+    from repro.rounds import compression
+
+    rows = []
+    for name in compression.registered_compressions():
+        s = compression.get_compression(name)
+        rows.append((
+            f"`{s.name}`",
+            s.bytes_formula,
+            f"{s.rate_penalty:g}x",
+            "yes" if s.error_feedback else "no",
+            s.summary,
+        ))
+    return _md_table(
+        ("compression", "payload bytes", "rate penalty", "error feedback",
+         "note"), rows)
+
+
 def policy_table() -> str:
     from repro.fed import staleness
 
@@ -143,6 +166,7 @@ TABLES = {
     "attacks": attack_table,
     "aggregators": aggregator_table,
     "strategies": strategy_table,
+    "compression": compression_table,
     "policies": policy_table,
 }
 
@@ -196,7 +220,7 @@ def main(argv=None) -> int:
         prog="python -m repro.docs",
         description="Regenerate the registry-backed README tables "
                     "(attacks, aggregators, collective strategies, "
-                    "staleness policies)")
+                    "compression codecs, staleness policies)")
     ap.add_argument("--check", action="store_true",
                     help="verify the tables match the registries; exit 1 on "
                          "drift without writing anything (the CI docs gate)")

@@ -197,6 +197,13 @@ def run_async_rounds(
     aggregated after policy drops), ``staleness_mean`` (mean staleness
     of the buffer), ``pending`` (in-flight reports carried to the next
     round), and ``timing`` (the Byzantine arrival mode in effect)."""
+    if rcfg.compression != "none":
+        # the staleness regrouping path recomputes rows per depth and does
+        # not thread codec state — half-applying the codec on the fresh
+        # fast path only would silently change what the config claims
+        raise ValueError(
+            "the async round engine does not thread compression; use the "
+            "synchronous run_rounds for compressed payloads")
     H = async_cfg.max_staleness + 1
     opt = get_optimizer(rcfg.optimizer, rcfg.lr)
     w = jnp.zeros((pop.cfg.dim,)) if w0 is None else w0

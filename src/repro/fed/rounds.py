@@ -48,6 +48,7 @@ from repro.core.attacks import AttackConfig, apply_gradient_attack
 from repro.fed import streaming
 from repro.fed.population import ClientPopulation
 from repro.optim.optimizers import get_optimizer
+from repro.rounds import compression as comp_lib
 
 STREAMING_METHODS = ("approx_median", "approx_trimmed_mean", "stream_mean")
 
@@ -69,6 +70,12 @@ class RoundConfig:
     # transmits its accumulated local gradient; 1 = plain FedSGD rounds
     local_steps: int = 1
     local_lr: float = 0.1
+    # rounds.compression codec on the transmitted client payloads —
+    # applied BEFORE the attack (the colluders observe/replace decoded
+    # wire values).  Randomized codecs fold CLIENT IDENTITY into the key
+    # (trajectories invariant to chunk_clients); error-feedback schemes
+    # keep a (num_clients, d) residual carried by run_rounds.
+    compression: str = "none"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,22 +118,67 @@ def _chunk_bounds(total: int, chunk: int) -> list:
     return [(s, min(s + chunk, total)) for s in range(0, total, chunk)]
 
 
+def _raw_chunk_rows(pop: ClientPopulation, w, cids,
+                    local_steps: int, local_lr: float) -> jax.Array:
+    if local_steps > 1:
+        # local-update round: clients transmit accumulated local
+        # gradients; the attack corrupts the TRANSMITTED deltas, same
+        # threat surface as the gradient case
+        return pop.client_deltas(w, cids, local_steps, local_lr)  # (rows, d)
+    return pop.client_grads(w, cids)  # (rows, d)
+
+
+def _compress_chunk(rows: jax.Array, cids: jax.Array, compression: str,
+                    rnd: int, comp_res: Optional[jax.Array]):
+    """One chunk of client payloads through the codec: returns the DECODED
+    transmitted rows and the chunk's new residual rows (or None).
+
+    Key discipline — the determinism contract: randomized codecs fold
+    each CLIENT'S ID (not the chunk index) into the round key, and
+    shared-key codecs use the bare round key, so the decoded values are
+    invariant to how the cohort is chunked (``chunk_clients``).
+    Error-feedback rows are gathered per client id from the population
+    residual ``comp_res``.
+    """
+    spec = comp_lib.get_compression(compression)
+    if spec.name == "none":
+        return rows, None
+    round_key = jax.random.fold_in(jax.random.PRNGKey(11), rnd)
+    if spec.randomized:
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(round_key, cids)
+        return comp_lib.compress_rows(compression, rows, keys=keys)
+    if spec.error_feedback:
+        if comp_res is None:
+            raise ValueError(
+                f"compression {compression!r} carries per-client error-"
+                "feedback residuals; aggregate through run_rounds (it owns "
+                "the (num_clients, d) residual state)")
+        return comp_lib.compress_rows(compression, rows,
+                                      residual=comp_res[cids])
+    return comp_lib.compress_rows(
+        compression, rows, key=round_key if spec.shared_key else None)
+
+
 def _make_chunk_fn(pop: ClientPopulation, w, ids, bounds,
                    attack: Optional[AttackConfig],
                    prev_agg: Optional[jax.Array] = None, rnd: int = 0,
-                   local_steps: int = 1, local_lr: float = 0.1):
+                   local_steps: int = 1, local_lr: float = 0.1,
+                   compression: str = "none",
+                   comp_res: Optional[jax.Array] = None):
     base_key = jax.random.fold_in(jax.random.PRNGKey(7), rnd)
+    if compression != "none":  # raise the EF-without-state trap at build
+        _compress_chunk(jnp.zeros((1, pop.cfg.dim)), ids[:1], compression,
+                        rnd, comp_res)
 
     def chunk_fn(j: int) -> jax.Array:
         s, e = bounds[j]
         cids = ids[s:e]
-        if local_steps > 1:
-            # local-update round: clients transmit accumulated local
-            # gradients; the attack corrupts the TRANSMITTED deltas, same
-            # threat surface as the gradient case
-            g = pop.client_deltas(w, cids, local_steps, local_lr)  # (rows, d)
-        else:
-            g = pop.client_grads(w, cids)  # (rows, d)
+        g = _raw_chunk_rows(pop, w, cids, local_steps, local_lr)
+        # codec first: honest AND Byzantine clients transmit through the
+        # same wire, so the attack observes/replaces decoded values (the
+        # residual is read-only here — chunk_fn runs twice per sketch
+        # pass and must stay pure; run_rounds recomputes the update)
+        g, _ = _compress_chunk(g, cids, compression, rnd, comp_res)
         if attack is not None and attack.alpha > 0:
             g = apply_gradient_attack(
                 attack, g, pop.is_byzantine(cids),
@@ -144,13 +196,17 @@ def aggregate_cohort(
     attack: Optional[AttackConfig] = None,
     prev_agg: Optional[jax.Array] = None,
     rnd: int = 0,
+    comp_res: Optional[jax.Array] = None,
 ) -> jax.Array:
     """One cohort's aggregated gradient (or accumulated local-update
     delta when ``rcfg.local_steps > 1``), streaming or exact per
-    rcfg.method."""
+    rcfg.method.  ``comp_res`` is the (num_clients, d) error-feedback
+    residual when ``rcfg.compression`` carries one (run_rounds owns it;
+    calling with an error-feedback scheme and no residual raises)."""
     bounds = _chunk_bounds(ids.shape[0], rcfg.chunk_clients)
     chunk_fn = _make_chunk_fn(pop, w, ids, bounds, attack, prev_agg, rnd,
-                              rcfg.local_steps, rcfg.local_lr)
+                              rcfg.local_steps, rcfg.local_lr,
+                              rcfg.compression, comp_res)
     if rcfg.method in STREAMING_METHODS:
         method = {"approx_median": "median",
                   "approx_trimmed_mean": "trimmed_mean",
@@ -161,6 +217,33 @@ def aggregate_cohort(
     # exact reference path: materialize (cohort, d) — small cohorts only
     stacked = jnp.concatenate([chunk_fn(j) for j in range(len(bounds))], axis=0)
     return aggregators.get_aggregator(rcfg.method, rcfg.beta)(stacked)
+
+
+def init_comp_residual(pop: ClientPopulation,
+                       rcfg: RoundConfig) -> Optional[jax.Array]:
+    """The population's error-feedback state: zeros (num_clients, d) for
+    error-feedback compression, None otherwise.  O(num_clients·d) — the
+    residual belongs to each CLIENT and must survive rounds in which the
+    client is not sampled (that is the point of error feedback)."""
+    if not comp_lib.get_compression(rcfg.compression).error_feedback:
+        return None
+    return jnp.zeros((pop.cfg.num_clients, pop.cfg.dim), jnp.float32)
+
+
+def update_comp_residual(pop: ClientPopulation, w, ids, rcfg: RoundConfig,
+                         comp_res: jax.Array, rnd: int) -> jax.Array:
+    """Second pass of an error-feedback round: recompute the sampled
+    clients' raw payloads and scatter their new residuals into the
+    population state.  Kept OUT of chunk_fn because the streaming sketch
+    calls chunk_fn twice per chunk — a write there would double-apply."""
+    bounds = _chunk_bounds(ids.shape[0], rcfg.chunk_clients)
+    for j, (s, e) in enumerate(bounds):
+        cids = ids[s:e]
+        rows = _raw_chunk_rows(pop, w, cids, rcfg.local_steps, rcfg.local_lr)
+        _, new_res = _compress_chunk(rows, cids, rcfg.compression, rnd,
+                                     comp_res)
+        comp_res = comp_res.at[cids].set(new_res)
+    return comp_res
 
 
 def run_rounds(
@@ -183,10 +266,14 @@ def run_rounds(
     history = []
     prev_g = None  # previous round's broadcast aggregate (adaptive attacks)
     prev_err = float(jnp.linalg.norm(w - pop.w_star))
+    comp_res = init_comp_residual(pop, rcfg)
     for r in range(rcfg.num_rounds):
         attack = mixture.for_round(r, scheduler)
         ids = pop.sample_cohort(jax.random.fold_in(root, r), rcfg.cohort_size)
-        g = aggregate_cohort(pop, w, ids, rcfg, attack, prev_agg=prev_g, rnd=r)
+        g = aggregate_cohort(pop, w, ids, rcfg, attack, prev_agg=prev_g, rnd=r,
+                             comp_res=comp_res)
+        if comp_res is not None:
+            comp_res = update_comp_residual(pop, w, ids, rcfg, comp_res, r)
         # adaptive attacks must see the aggregate at TRANSMITTED-delta
         # scale (what the clients observe broadcast), not the rescaled
         # optimizer input — matches rounds.local_update_gd semantics

@@ -15,6 +15,12 @@ Attack mixture cycling sign_flip and alie each round::
 
     python -m repro.fed.run --alpha 0.1 --attack sign_flip,alie
 
+Compressed client payloads (rounds.compression codecs — attacks act on
+the decoded wire values; topk threads per-client error-feedback state)::
+
+    python -m repro.fed.run --alpha 0.1 --attack alie --compression int8
+    python -m repro.fed.run --compression topk --rounds 30
+
 Buffered async rounds: close each round at the first 512 of 1024
 arrivals under heavy-tailed latency, damping stale deltas::
 
@@ -27,6 +33,7 @@ import argparse
 
 from repro.core.attacks import AttackConfig
 from repro.core import theory
+from repro.rounds import compression
 from repro.fed.async_rounds import AsyncConfig, run_async_rounds
 from repro.fed.population import ArrivalConfig, ClientPopulation, PopulationConfig
 from repro.fed.rounds import AttackMixture, RoundConfig, run_rounds
@@ -70,6 +77,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "local-update interpolation; 1 = FedSGD)")
     p.add_argument("--local-lr", type=float, default=0.1,
                    help="local SGD lr used when --local-steps > 1")
+    p.add_argument("--compression", default="none",
+                   choices=list(compression.registered_compressions()),
+                   help="payload codec on the transmitted client "
+                        "gradients/deltas (rounds.compression); attacks "
+                        "observe and replace the DECODED wire values, and "
+                        "topk keeps per-client error-feedback residuals "
+                        "(synchronous rounds only)")
     p.add_argument("--seed", type=int, default=0)
     # buffered async rounds (fed/async_rounds.py)
     p.add_argument("--async-buffer", type=int, default=0, metavar="K",
@@ -113,7 +127,7 @@ def main(argv=None) -> int:
         chunk_clients=args.chunk, method=args.method, beta=args.beta,
         nbins=args.nbins, backend=args.backend, optimizer=args.optimizer,
         lr=args.lr, seed=args.seed, local_steps=args.local_steps,
-        local_lr=args.local_lr)
+        local_lr=args.local_lr, compression=args.compression)
     attacks = ()
     if args.alpha > 0:
         attacks = tuple(
@@ -126,7 +140,8 @@ def main(argv=None) -> int:
           f"heterogeneity={pcfg.heterogeneity}")
     print(f"rounds: {rcfg.num_rounds} x cohort {rcfg.cohort_size} "
           f"(chunks of {rcfg.chunk_clients}), method={rcfg.method}, "
-          f"nbins={rcfg.nbins}, tau={rcfg.local_steps}")
+          f"nbins={rcfg.nbins}, tau={rcfg.local_steps}, "
+          f"compression={rcfg.compression}")
     mixture = AttackMixture(attacks, schedule=args.schedule)
     if args.async_buffer > 0:
         acfg = AsyncConfig(

@@ -17,6 +17,7 @@
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -28,6 +29,7 @@ from repro.core import distributed
 from repro.core.attacks import AttackConfig
 from repro.launch import mesh as mesh_lib
 from repro.rounds import comm
+from repro.rounds import compression as comp_lib
 from repro.rounds import distributed as rounds_dist
 from repro.models import transformer as T
 from repro.models.sharding import ShardCtx, tree_partition_specs
@@ -311,6 +313,15 @@ class StepBody:
     every micro-step of a scan window draws fresh attack noise).
     ``pspec/ospec/batch_spec`` are the shard_map in_specs for params /
     optimizer state / batch.
+
+    Error-feedback compression (ParallelConfig.compression='topk')
+    additionally needs per-worker residual state, which the 5-argument
+    ``body`` cannot carry: ``comp_body(params, opt_state, comp, batch,
+    step, atk_base) -> (params, opt_state, comp, metrics)`` threads it
+    (``comp`` = this worker's (1, D) residual shard, spec ``comp_spec``),
+    and is None for every residual-free scheme — only the device-steps
+    trainer (launch.trainer) uses it; ``make_train_step`` rejects
+    error-feedback schemes at build time.
     """
 
     body: Any
@@ -318,6 +329,8 @@ class StepBody:
     ospec: Any
     batch_spec: Any
     waxes: Tuple[str, ...]
+    comp_body: Any = None  # only set for error-feedback compression
+    comp_spec: Any = P()  # shard_map spec of the residual state
 
 
 def make_step_body(
@@ -365,6 +378,13 @@ def make_step_body(
                    seq_parallel=pcfg.seq_parallel)
     agg_dtype = jnp.dtype(pcfg.agg_dtype) if pcfg.agg_dtype else None
     fsdp = pcfg.param_mode == "fsdp"
+    comp_spec_obj = comp_lib.get_compression(pcfg.compression)  # validates name
+    ef = comp_spec_obj.error_feedback
+    if pcfg.compression != "none" and fsdp:
+        raise ValueError(
+            "compression needs param_mode='replicated': the fsdp path fuses "
+            "robust aggregation into the parameter-gather backward, so there "
+            "is no transmitted gradient payload to encode")
     tau = pcfg.local_steps
     if tau < 1:
         raise ValueError(f"local_steps must be >= 1, got {tau}")
@@ -389,7 +409,7 @@ def make_step_body(
             return T.loss_fn(params, batch, cfg, ctx, remat=pcfg.remat,
                              kv_block=pcfg.attn_chunk)
 
-    def body(params, opt_state, batch, step, atk_base):
+    def _core(params, opt_state, comp, batch, step, atk_base):
         if tau == 1:
             loss, grads = jax.value_and_grad(local_loss)(params, batch)
         else:
@@ -412,10 +432,27 @@ def make_step_body(
                     {"x": g}, waxes, pcfg.agg_method, pcfg.agg_beta, attack,
                     agg_dtype, attack_key=atk_key)["x"],
                 dims, grads)
-        else:
+        elif ef:
+            # error feedback: this worker's residual shard ``comp`` is
+            # (1, D); transmit decode(encode(g + e)) and carry the new
+            # residual — the collective then ships already-decoded rows
+            ckey = None
+            if comp_spec_obj.randomized:
+                ckey = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.PRNGKey(11), step),
+                    rounds_dist._worker_index(waxes))
+            grads, new_res = comp_lib.compress_tree(
+                pcfg.compression, grads, key=ckey, residual=comp[0])
+            comp = jnp.expand_dims(new_res, 0)
             agg = rounds_dist.aggregate_by_strategy(
                 grads, waxes, pcfg.agg_strategy, pcfg.agg_method, pcfg.agg_beta,
                 attack, agg_dtype, attack_key=atk_key)
+        else:
+            agg = rounds_dist.aggregate_by_strategy(
+                grads, waxes, pcfg.agg_strategy, pcfg.agg_method, pcfg.agg_beta,
+                attack, agg_dtype, attack_key=atk_key,
+                compression=pcfg.compression,
+                comp_key=jax.random.fold_in(jax.random.PRNGKey(11), step))
         if tau > 1:
             # hand the optimizer the MEAN local gradient so lr semantics
             # match tau=1 (the robust aggregate of Σ_k g_k, rescaled —
@@ -430,6 +467,11 @@ def make_step_body(
             "loss": jax.lax.pmean(loss, waxes),
             "grad_norm": jnp.sqrt(sq),
         }
+        return new_params, new_opt, comp, metrics
+
+    def body(params, opt_state, batch, step, atk_base):
+        new_params, new_opt, _, metrics = _core(
+            params, opt_state, None, batch, step, atk_base)
         return new_params, new_opt, metrics
 
     b_entry = _batch_entry(waxes)
@@ -449,7 +491,27 @@ def make_step_body(
     else:
         pspec, ospec = rep, rep
     return StepBody(body=body, pspec=pspec, ospec=ospec,
-                    batch_spec=batch_spec, waxes=waxes)
+                    batch_spec=batch_spec, waxes=waxes,
+                    comp_body=_core if ef else None,
+                    comp_spec=P(b_entry))
+
+
+def comp_state_size(cfg: ModelConfig) -> int:
+    """Flat parameter count D — the residual width of one worker's
+    error-feedback state (the transmitted payload is the whole gradient
+    pytree raveled to one (D,) message)."""
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(T.param_shapes(cfg)))
+
+
+def init_comp_state(cfg: ModelConfig, pcfg: ParallelConfig, mesh):
+    """Initial compression state for the trainer: zeros (num_workers, D)
+    f32 sharded one row per worker for error-feedback schemes, ``()``
+    otherwise (so the trainer state keeps a static structure)."""
+    if not comp_lib.get_compression(pcfg.compression).error_feedback:
+        return ()
+    m = mesh_lib.num_workers(mesh)
+    sh = NamedSharding(mesh, P(_batch_entry(mesh_lib.worker_axes(mesh))))
+    return jax.device_put(jnp.zeros((m, comp_state_size(cfg)), jnp.float32), sh)
 
 
 def make_train_step(
@@ -469,7 +531,13 @@ def make_train_step(
     collective: the chunked/psum strategy never materializes per-worker
     rows, so omniscient attacks (mimic, max_damage_tm, ...) need
     gather/bucketed.
+
+    Error-feedback compression schemes are rejected here: this step is
+    stateless, so the per-worker residual would be silently dropped —
+    the device-steps trainer (launch.trainer) threads it instead.
     """
+    comp_lib.validate_compression_context(
+        pcfg.compression, stateful=False, where="the stateless train step")
     sb = make_step_body(cfg, pcfg, mesh, opt, attack)
 
     def step(params, opt_state, batch, step_idx):

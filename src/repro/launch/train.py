@@ -17,6 +17,12 @@ workers running ALIE, bucketed median aggregation, 16-step windows):
   PYTHONPATH=src python -m repro.launch.train --config llama3.2-3b --smoke \\
       --steps 64 --device-steps 16 --workers 8 \\
       --strategy bucketed --agg median --attack alie --attack-alpha 0.25
+
+Compressed transmitted gradients (rounds.compression): add e.g.
+``--compression int8`` — the codec runs per worker BEFORE the collective
+and before any attack, so Byzantine payloads replace decoded wire
+values; ``--compression topk`` threads per-worker error-feedback
+residuals through the window state (device-steps trainer only).
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from repro.core.attacks import AttackConfig
 from repro.data.pipeline import DataConfig
 from repro.launch import trainer
 from repro.launch.mesh import make_debug_mesh, make_production_mesh, num_workers
+from repro.rounds import compression
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -53,6 +60,12 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["mean", "median", "trimmed_mean",
                              "approx_median", "approx_trimmed_mean"])
     ap.add_argument("--beta", type=float, default=0.25)
+    ap.add_argument("--compression", default="none",
+                    choices=list(compression.registered_compressions()),
+                    help="codec on each worker's transmitted gradient "
+                         "(rounds.compression) — runs before the "
+                         "collective and before any attack; topk carries "
+                         "error-feedback state in the training window")
     ap.add_argument("--attack", default="none")
     ap.add_argument("--attack-alpha", type=float, default=0.0)
     ap.add_argument("--optimizer", default="adamw")
@@ -82,7 +95,8 @@ def main(argv=None) -> int:
         args.agg = "mean"
     pcfg = ParallelConfig(agg_method=args.agg, agg_beta=args.beta,
                           agg_strategy=args.strategy, remat=True,
-                          attn_chunk=args.attn_chunk)
+                          attn_chunk=args.attn_chunk,
+                          compression=args.compression)
     tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr, steps=args.steps,
                        seed=args.seed, attack=args.attack,
                        attack_alpha=args.attack_alpha,

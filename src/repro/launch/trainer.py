@@ -51,6 +51,7 @@ from repro.launch import mesh as mesh_lib
 from repro.launch import steps
 from repro.models import transformer as T
 from repro.optim.optimizers import Optimizer, get_optimizer
+from repro.rounds import compression as comp_lib
 from repro.rounds import distributed as rounds_dist
 
 
@@ -75,6 +76,10 @@ def init_state(cfg: ModelConfig, mesh, opt: Optimizer, seed: int = 0,
     return {
         "params": params,
         "opt_state": opt.init(params),
+        # per-worker compression residual ((m, D) zeros for error-feedback
+        # schemes, () otherwise) — rides the donated carry like opt_state
+        "comp": (steps.init_comp_state(cfg, pcfg, mesh)
+                 if pcfg is not None else ()),
         "step": jnp.int32(0),
         "key": jax.random.PRNGKey(seed),
         "metrics": zero_metrics(),
@@ -146,24 +151,33 @@ def make_window_step(
         atk_base = state["key"]
 
         def micro(carry, batch):
-            params, opt_state, step, met = carry
-            params, opt_state, m = sb.body(params, opt_state, batch, step, atk_base)
+            params, opt_state, comp, step, met = carry
+            if sb.comp_body is not None:
+                # error-feedback compression: the residual rides the
+                # window carry exactly like the optimizer state
+                params, opt_state, comp, m = sb.comp_body(
+                    params, opt_state, comp, batch, step, atk_base)
+            else:
+                params, opt_state, m = sb.body(
+                    params, opt_state, batch, step, atk_base)
             met = {
                 "loss_sum": met["loss_sum"] + m["loss"].astype(jnp.float32),
                 "grad_norm_sum": met["grad_norm_sum"]
                                  + m["grad_norm"].astype(jnp.float32),
                 "micro_steps": met["micro_steps"] + jnp.int32(1),
             }
-            return (params, opt_state, step + jnp.int32(1), met), None
+            return (params, opt_state, comp, step + jnp.int32(1), met), None
 
-        (p, o, step, met), _ = jax.lax.scan(
+        (p, o, comp, step, met), _ = jax.lax.scan(
             micro,
-            (state["params"], state["opt_state"], state["step"], state["metrics"]),
+            (state["params"], state["opt_state"], state["comp"],
+             state["step"], state["metrics"]),
             batches, length=device_steps)
-        return {"params": p, "opt_state": o, "step": step, "key": atk_base,
-                "metrics": met}
+        return {"params": p, "opt_state": o, "comp": comp, "step": step,
+                "key": atk_base, "metrics": met}
 
-    sspec = {"params": sb.pspec, "opt_state": sb.ospec, "step": P(),
+    sspec = {"params": sb.pspec, "opt_state": sb.ospec,
+             "comp": sb.comp_spec, "step": P(),
              "key": P(), "metrics": P()}
     wbspec = _window_batch_spec(sb.batch_spec)
     smapped = rounds_dist.shard_map_compat(
@@ -223,9 +237,18 @@ def abstract_state(cfg: ModelConfig, mesh, opt: Optimizer,
         aopt = steps.abstract_opt_state(opt, cfg, mesh)
     rep = NamedSharding(mesh, P())
     key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    acomp = ()
+    if pcfg is not None and comp_lib.get_compression(
+            pcfg.compression).error_feedback:
+        waxes = mesh_lib.worker_axes(mesh)
+        entry = waxes if len(waxes) > 1 else waxes[0]
+        acomp = jax.ShapeDtypeStruct(
+            (mesh_lib.num_workers(mesh), steps.comp_state_size(cfg)),
+            jnp.float32, sharding=NamedSharding(mesh, P(entry)))
     return {
         "params": aparams,
         "opt_state": aopt,
+        "comp": acomp,
         "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
         "key": jax.ShapeDtypeStruct(key.shape, key.dtype, sharding=rep),
         "metrics": {

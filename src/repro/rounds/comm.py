@@ -59,8 +59,19 @@ class StrategySpec:
         attack_base.access_rank(self.max_access)  # validate
 
     def bytes_per_round(self, num_params: int, m: int,
-                        dtype_bytes: int = 4, nbins: int = 256) -> int:
-        return int(self.bytes_fn(num_params, m, dtype_bytes, nbins))
+                        dtype_bytes: int = 4, nbins: int = 256,
+                        compression: str = "none") -> int:
+        """Per-device collective bytes of one round, optionally scaled by
+        a compression scheme: every registered formula is linear in
+        ``|g|·b``, so the compressed cost is the raw cost times the
+        scheme's encoded:raw payload ratio (rounds.compression)."""
+        raw = self.bytes_fn(num_params, m, dtype_bytes, nbins)
+        if compression != "none":
+            from repro.rounds import compression as comp_mod
+
+            raw = raw * comp_mod.get_compression(compression).ratio(
+                num_params, dtype_bytes)
+        return int(raw)
 
 
 _STRATEGIES: Dict[str, StrategySpec] = {}
@@ -214,6 +225,7 @@ class CommBudget:
     m: int
     dtype_bytes: int = 4
     nbins: int = 256
+    compression: str = "none"  # rounds.compression scheme scaling the bytes
     rounds: int = 0
 
     def spec(self) -> StrategySpec:
@@ -222,7 +234,8 @@ class CommBudget:
     @property
     def bytes_per_round(self) -> int:
         return self.spec().bytes_per_round(
-            self.num_params, self.m, self.dtype_bytes, self.nbins)
+            self.num_params, self.m, self.dtype_bytes, self.nbins,
+            compression=self.compression)
 
     def charge(self, rounds: int = 1) -> None:
         if rounds < 0:
@@ -240,6 +253,7 @@ class CommBudget:
             "m": self.m,
             "dtype_bytes": self.dtype_bytes,
             "nbins": self.nbins,
+            "compression": self.compression,
             "rounds": self.rounds,
             "bytes_per_round": self.bytes_per_round,
             "total_bytes": self.total_bytes,

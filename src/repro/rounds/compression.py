@@ -1,0 +1,421 @@
+"""Composable gradient compression under the CommBudget.
+
+Every collective strategy in rounds/comm.py still ships full-precision
+payloads; this module is the compression layer that composes with all of
+them — the first ROADMAP open item, grounded in "Communication-efficient
+Byzantine-robust distributed learning with statistical guarantee" and
+"Securing Distributed Gradient Descent in High Dimensional Statistical
+Learning" (PAPERS.md).  A :class:`CompressionSpec` registry (mirroring
+StrategySpec / StalenessPolicySpec) declares, per scheme:
+
+- ``encode_fn`` / ``decode_fn`` — the wire codec.  Workers transmit
+  ``encode(x)``; every consumer — the robust aggregator AND the attack
+  engine — sees only ``decode(encode(x))``, the *decoded transmitted
+  values*.  Attacks therefore act post-decode (stats attacks like ALIE
+  estimate mean/std of the decoded honest rows, exactly what a real
+  colluder observing the wire would see), and Byzantine payloads are
+  unconstrained post-decode vectors — a strictly STRONGER adversary than
+  one limited to the codec's image, so the theory gates are conservative;
+- a bytes model (``bytes_fn`` + the human-readable ``bytes_formula``)
+  priced into ``StrategySpec.bytes_per_round`` / ``CommBudget`` as the
+  encoded-payload : raw-payload ratio — every strategy's byte formula is
+  linear in ``|g|·b``, so the ratio scaling is exact;
+- a declared **rate penalty** (multiplies the core/theory.py Δ bounds —
+  checked by benchmarks/comm_efficiency.py and the compressed robustness
+  matrix cells) and **breakdown scale** (multiplies the aggregator's
+  usable Byzantine-fraction ceiling — count-sketch hash collisions mix
+  Byzantine mass into honest coordinates, shrinking the safe margin);
+- whether the scheme carries **error feedback**: top-k sparsification
+  keeps a per-worker residual ``e ← (x + e) − decode(encode(x + e))``
+  that must live in the caller's round state (scan carry / trainer
+  state["comp"] / per-client residual array — see the integrations).
+
+Registered schemes:
+
+``none``          identity; integrations short-circuit BEFORE any codec
+                  code runs, so the uncompressed paths stay bit-exact;
+``int8``          stochastic byte quantization with a per-chunk scale
+                  (unbiased: E[decode(encode(x))] = x), ≈(b·256)/(256+b)×
+                  byte saving (3.94× at f32);
+``topk``          top-k-by-magnitude sparsification (k = knob·|g|) with
+                  per-worker error-feedback residual; value+index pairs
+                  on the wire;
+``count_sketch``  sign-hash count sketch of width w = knob·|g| — ONE
+                  public linear map per round, shared by every worker
+                  and rotated across rounds (a fixed hash would pin the
+                  sketch's null space forever and stall GD; rotation
+                  makes E[decode(encode(x))] = x).  Because the decode
+                  x̂ᵢ = sᵢ·t[h(i)] is linear and coordinate-wise robust
+                  aggregators are odd and scale-equivariant, decoding
+                  per row and aggregating equals aggregating the sketches
+                  and decoding once — the median-of-sketches estimator of
+                  the high-dimensional paper — which is what lets the
+                  scheme compose with fed/streaming's histogram sketch
+                  (the sketch aggregates decoded rows; bytes are priced
+                  at sketch width).  See DESIGN.md §Compression.
+
+All codecs operate on flat f32 vectors; :func:`compress_rows` /
+:func:`compress_tree` adapt stacked per-worker rows and parameter
+pytrees.  Randomized codecs (int8) take explicit PRNG keys and every
+integration folds WORKER/CLIENT IDENTITY (not streaming-chunk position)
+into the key, so trajectories are invariant to chunking — the
+determinism contract tests/test_compression.py pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fixed seed of the shared count-sketch hash: the codec must be one
+# PUBLIC linear map (server + all workers agree on it), not per-call
+# randomness
+_SKETCH_SEED = 1729
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """One compression scheme's codec + cost + theory contract.
+
+    ``encode_fn(x, knob, key)`` maps a flat (d,) vector to the wire
+    pytree; ``decode_fn(enc, d, knob)`` inverts it (lossily).
+    ``bytes_fn(num_params, dtype_bytes)`` prices the encoded payload of
+    one d-vector; ``rate_penalty`` multiplies the core/theory.py Δ
+    bounds for compressed cells and ``breakdown_scale`` multiplies the
+    aggregator's usable Byzantine-fraction ceiling (1.0 = unchanged).
+    ``error_feedback`` schemes require the caller to thread a residual
+    (:func:`init_residual`); ``randomized`` schemes require a PRNG key.
+    """
+
+    name: str
+    bytes_formula: str  # human-readable encoded bytes per d-vector
+    bytes_fn: Callable[[int, int], int]  # (num_params, dtype_bytes) -> bytes
+    encode_fn: Callable
+    decode_fn: Callable
+    rate_penalty: float = 1.0  # multiplier on the Delta statistical bounds
+    breakdown_scale: float = 1.0  # multiplier on the usable alpha ceiling
+    error_feedback: bool = False
+    randomized: bool = False  # needs a PRNG key, folded PER WORKER
+    # needs a PRNG key SHARED by all workers of a round (one public map
+    # per round — the count-sketch hash rotation); mutually exclusive
+    # with ``randomized``
+    shared_key: bool = False
+    unbiased: bool = False  # E[decode(encode(x))] == x
+    knob: float = 0.0  # chunk size (int8) / kept fraction (topk, sketch)
+    summary: str = ""
+
+    def payload_bytes(self, num_params: int, dtype_bytes: int = 4) -> int:
+        return int(self.bytes_fn(num_params, dtype_bytes))
+
+    def ratio(self, num_params: int, dtype_bytes: int = 4) -> float:
+        """Encoded : raw payload size — the factor every strategy's
+        per-round byte formula scales by (all are linear in |g|·b)."""
+        return self.payload_bytes(num_params, dtype_bytes) / float(
+            num_params * dtype_bytes)
+
+
+_COMPRESSIONS: Dict[str, CompressionSpec] = {}
+
+
+def register_compression(spec: CompressionSpec) -> CompressionSpec:
+    if spec.name in _COMPRESSIONS:
+        raise ValueError(f"compression {spec.name!r} already registered")
+    _COMPRESSIONS[spec.name] = spec
+    return spec
+
+
+def get_compression(name: str) -> CompressionSpec:
+    try:
+        return _COMPRESSIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compression {name!r}; registered: "
+            f"{', '.join(registered_compressions())}") from None
+
+
+def registered_compressions() -> Tuple[str, ...]:
+    """Registered scheme names, registration order (== docs-table order)."""
+    return tuple(_COMPRESSIONS)
+
+
+# ------------------------------------------------------------------ codecs
+
+
+def _int8_encode(x: jax.Array, knob: float, key):
+    """Per-chunk-scaled stochastic int8: q = ⌊x/scale + u⌋, u ~ U[0,1).
+
+    Unbiased for any real v: E[⌊v + u⌋] = v.  The per-chunk scale
+    (max|x| over each ``knob``-sized chunk / 127) keeps the quantization
+    grid local, so one huge coordinate does not wash out the rest of the
+    vector — the per-chunk-scale requirement of the tentpole."""
+    if key is None:
+        raise ValueError("int8 stochastic quantization needs a PRNG key")
+    chunk = int(knob)
+    d = x.shape[0]
+    nc = -(-d // chunk)
+    xp = jnp.pad(x.astype(jnp.float32), (0, nc * chunk - d)).reshape(nc, chunk)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale > 0, scale, 1.0)
+    u = jax.random.uniform(key, xp.shape)
+    q = jnp.clip(jnp.floor(xp / scale + u), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _int8_decode(enc, d: int, knob: float) -> jax.Array:
+    return (enc["q"].astype(jnp.float32) * enc["scale"]).reshape(-1)[:d]
+
+
+def _topk_k(d: int, knob: float) -> int:
+    return max(1, min(d, int(round(knob * d))))
+
+
+def _topk_encode(x: jax.Array, knob: float, key):
+    k = _topk_k(x.shape[0], knob)
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    return {"idx": idx.astype(jnp.int32), "val": x[idx]}
+
+
+def _topk_decode(enc, d: int, knob: float) -> jax.Array:
+    return jnp.zeros((d,), enc["val"].dtype).at[enc["idx"]].set(enc["val"])
+
+
+@functools.lru_cache(maxsize=None)
+def _sketch_hash(d: int, w: int):
+    """The fixed (bucket, sign) hash of the width-w count sketch over d
+    coordinates — pure-numpy host constants (one shared PUBLIC map; jax
+    ops would be staged as traced values when first called inside a
+    jit trace, so the hash must be built outside jax)."""
+    rng = np.random.RandomState(_SKETCH_SEED)
+    h = rng.randint(0, w, size=d).astype(np.int32)
+    s = (rng.randint(0, 2, size=d) * 2 - 1).astype(np.float32)
+    return h, s
+
+
+def _sketch_w(d: int, knob: float) -> int:
+    return max(1, min(d, int(round(knob * d))))
+
+
+def _sketch_encode(x: jax.Array, knob: float, key):
+    """Width-w sign-hash count sketch.  decode(encode(x)) = AᵀA·x for the
+    w×d sketch matrix A — a rank-w PSD map, so a FIXED hash would pin
+    null(A) forever and GD could never correct those directions.  The
+    per-round ``key`` (one public draw SHARED by every worker — the
+    integrations pass the round-folded key, never a worker-folded one)
+    rotates the hash instead: E[AᵀA] = I over the rotation, making the
+    scheme unbiased across rounds while each round still uses ONE linear
+    map.  ``h``/``s`` ride the encoded dict for the decoder's convenience
+    but are public (derivable from the round index) — not payload bytes."""
+    d = x.shape[0]
+    w = _sketch_w(d, knob)
+    if key is None:  # fixed public map (single-shot roundtrip/tests)
+        h, s = _sketch_hash(d, w)
+        h, s = jnp.asarray(h), jnp.asarray(s)
+    else:
+        kh, ks = jax.random.split(key)
+        h = jax.random.randint(kh, (d,), 0, w)
+        s = jax.random.bernoulli(ks, 0.5, (d,)).astype(jnp.float32) * 2 - 1
+    return {"sketch": jax.ops.segment_sum(s * x, h, num_segments=w),
+            "h": h, "s": s}
+
+
+def _sketch_decode(enc, d: int, knob: float) -> jax.Array:
+    return enc["s"] * enc["sketch"][enc["h"]]
+
+
+register_compression(CompressionSpec(
+    "none",
+    bytes_formula="|g|·b",
+    bytes_fn=lambda d, b: d * b,
+    encode_fn=lambda x, knob, key: x,
+    decode_fn=lambda enc, d, knob: enc,
+    rate_penalty=1.0, unbiased=True,
+    summary="identity — full-precision payloads (the uncompressed pin)",
+))
+register_compression(CompressionSpec(
+    "int8",
+    bytes_formula="|g| + ⌈|g|/256⌉·b (int8 + per-chunk scale)",
+    bytes_fn=lambda d, b: d + (-(-d // 256)) * b,
+    encode_fn=_int8_encode, decode_fn=_int8_decode,
+    rate_penalty=1.5, randomized=True, unbiased=True, knob=256,
+    summary="stochastic byte quantization, per-256-chunk scale (unbiased)",
+))
+register_compression(CompressionSpec(
+    "topk",
+    bytes_formula="⌈|g|/4⌉·(b + 4) (value + int32 index)",
+    bytes_fn=lambda d, b: _topk_k(d, 0.25) * (b + 4),
+    encode_fn=_topk_encode, decode_fn=_topk_decode,
+    rate_penalty=2.0, error_feedback=True, knob=0.25,
+    summary="top-k by magnitude (k = |g|/4) with error-feedback residual",
+))
+register_compression(CompressionSpec(
+    "count_sketch",
+    bytes_formula="⌈|g|/2⌉·b (sign-hash sketch, width |g|/2)",
+    bytes_fn=lambda d, b: _sketch_w(d, 0.5) * b,
+    encode_fn=_sketch_encode, decode_fn=_sketch_decode,
+    rate_penalty=4.0, breakdown_scale=0.5, shared_key=True, unbiased=True,
+    knob=0.5,
+    summary="per-round-rotated sign-hash count sketch; composes with the "
+            "histogram sketch (linear decode — DESIGN.md §Compression)",
+))
+
+
+# -------------------------------------------------------------- application
+
+
+def roundtrip(name: str, x: jax.Array, *, key=None) -> jax.Array:
+    """decode(encode(x)) for one flat vector — the values the wire
+    delivers.  ``none`` returns ``x`` unchanged (no codec code runs)."""
+    spec = get_compression(name)
+    if spec.name == "none":
+        return x
+    return spec.decode_fn(spec.encode_fn(x, spec.knob, key), x.shape[0],
+                          spec.knob)
+
+
+def _apply_flat(spec: CompressionSpec, x, res, key):
+    """One worker's flat payload through the codec, with error feedback
+    when the spec carries it: transmit decode(encode(x + e)), keep
+    e' = (x + e) − transmitted."""
+    if spec.error_feedback:
+        tot = x + res
+        out = spec.decode_fn(spec.encode_fn(tot, spec.knob, key),
+                             x.shape[0], spec.knob)
+        return out, tot - out
+    out = spec.decode_fn(spec.encode_fn(x, spec.knob, key),
+                         x.shape[0], spec.knob)
+    return out, res
+
+
+def init_residual(name: str, like):
+    """Initial error-feedback state for a payload shaped ``like`` (pytree
+    or array): a zeros-like pytree for error-feedback schemes, ``()`` for
+    everything else (so round-state carries keep a static structure the
+    caller chooses at build time)."""
+    spec = get_compression(name)
+    if not spec.error_feedback:
+        return ()
+    return jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), like)
+
+
+def compress_rows(name: str, rows: jax.Array, *, key=None, keys=None,
+                  residual=None):
+    """Compress stacked per-worker payloads ``rows`` (m, ...) row by row.
+
+    Returns ``(decoded_rows, new_residual)`` with shapes preserved.  Row
+    i of a randomized codec draws from ``keys[i]`` when given (the fed
+    path passes client-id-folded keys so trajectories are invariant to
+    streaming chunk size) or ``fold_in(key, i)`` otherwise.  Error-
+    feedback schemes require ``residual`` (same shape as ``rows``; get
+    the initial zeros from :func:`init_residual`).
+    """
+    spec = get_compression(name)
+    if spec.name == "none":
+        return rows, residual
+    if spec.error_feedback and residual is None:
+        raise ValueError(
+            f"compression {spec.name!r} carries an error-feedback residual; "
+            "pass residual=init_residual(name, rows) and thread the returned "
+            "state through the round loop")
+    m = rows.shape[0]
+    flat = rows.reshape(m, -1)
+    if spec.randomized:
+        if keys is None:
+            if key is None:
+                raise ValueError(
+                    f"compression {spec.name!r} is randomized; pass key= or "
+                    "per-row keys=")
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(m))
+    else:
+        # shared-key schemes (count_sketch) close over ONE key for every
+        # row — the same public map for all workers of the round
+        shared = key if spec.shared_key else None
+        keys = jnp.zeros((m, 2), jnp.uint32)  # unused; fixed vmap structure
+    if spec.error_feedback:
+        res = residual.reshape(m, -1)
+        out, new_res = jax.vmap(
+            lambda x, r, k: _apply_flat(spec, x, r, k))(flat, res, keys)
+        return out.reshape(rows.shape), new_res.reshape(residual.shape)
+    if spec.randomized:
+        out = jax.vmap(lambda x, k: _apply_flat(spec, x, None, k)[0])(flat, keys)
+    else:
+        out = jax.vmap(lambda x: _apply_flat(spec, x, None, shared)[0])(flat)
+    return out.reshape(rows.shape), residual
+
+
+def compress_tree_rows(name: str, tree, *, key=None, residual=None):
+    """:func:`compress_rows` over every leaf of a stacked (m, ...) pytree
+    (the reference round engines' delta trees).  Each leaf folds its
+    position into ``key`` so no two leaves share stochastic-rounding
+    draws.  Returns ``(tree_hat, new_residual_tree)``."""
+    spec = get_compression(name)
+    if spec.name == "none":
+        return tree, residual
+    leaves, treedef = jax.tree.flatten(tree)
+    res_leaves = (jax.tree.flatten(residual)[0] if spec.error_feedback
+                  else [None] * len(leaves))
+    out, new_res = [], []
+    for i, (leaf, res) in enumerate(zip(leaves, res_leaves)):
+        k = None if key is None else jax.random.fold_in(key, i)
+        o, r = compress_rows(name, leaf, key=k, residual=res)
+        out.append(o)
+        new_res.append(r)
+    tree_hat = jax.tree.unflatten(treedef, out)
+    if spec.error_feedback:
+        return tree_hat, jax.tree.unflatten(jax.tree.structure(residual),
+                                            new_res)
+    return tree_hat, residual
+
+
+def compress_tree(name: str, tree, *, key=None, residual=None):
+    """Compress ONE worker's whole payload pytree as a single flat
+    message (what the launch/steps train step transmits): ravel, codec,
+    unravel.  ``residual`` is the flat (D,) error-feedback state.
+    Returns ``(tree_hat, new_residual)``."""
+    spec = get_compression(name)
+    if spec.name == "none":
+        return tree, residual
+    from jax import flatten_util
+
+    flat, unravel = flatten_util.ravel_pytree(tree)
+    if spec.randomized and key is None:
+        raise ValueError(f"compression {spec.name!r} is randomized; pass key=")
+    if spec.error_feedback and residual is None:
+        raise ValueError(
+            f"compression {spec.name!r} carries an error-feedback residual; "
+            "thread it through the round state (init_residual)")
+    out, new_res = _apply_flat(spec, flat.astype(jnp.float32),
+                               residual, key)
+    return unravel(out.astype(flat.dtype)), new_res
+
+
+def validate_compression_context(name: str, *, stateful: bool,
+                                 where: str) -> CompressionSpec:
+    """Build-time check shared by the stateless integration points
+    (aggregate_by_strategy dispatch, the distributed round programs,
+    make_train_step): an error-feedback scheme silently run WITHOUT its
+    residual would measure plain sparsification while reporting error
+    feedback — reject it where no round state exists, pointing at the
+    integrations that do thread state."""
+    spec = get_compression(name)
+    if spec.error_feedback and not stateful:
+        raise ValueError(
+            f"compression {spec.name!r} carries a per-worker error-feedback "
+            f"residual, which {where} does not thread; use "
+            "rounds.local_update.local_update_gd, launch.trainer (window "
+            "state) or fed.rounds.run_rounds — they carry the residual in "
+            "their round state")
+    return spec
+
+
+def breakdown_alpha(name: str, alpha_max: float) -> float:
+    """The usable Byzantine-fraction ceiling after compression: the
+    aggregator's own ceiling times the scheme's declared breakdown
+    scale (count-sketch collisions mix Byzantine mass into honest
+    coordinates, shrinking the safe margin — checked by the compressed
+    robustness-matrix cells)."""
+    return get_compression(name).breakdown_scale * alpha_max

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import distributed
 from repro.rounds import comm
+from repro.rounds import compression as comp_lib
 from repro.rounds.one_round import OneRoundConfig
 
 
@@ -51,6 +52,16 @@ def shard_map_compat(f, mesh, in_specs, out_specs, axis_names=None):
                      check_rep=False)
 
 
+def _worker_index(axis_names):
+    """Linearized index of this worker over the manual worker axes
+    (row-major, matching the gathered-row order).  ``psum(1, a)`` is the
+    axis size on every jax version the repo supports."""
+    idx = jnp.int32(0)
+    for a in axis_names:
+        idx = idx * jax.lax.psum(jnp.int32(1), a) + jax.lax.axis_index(a)
+    return idx
+
+
 def aggregate_by_strategy(
     g,
     axis_names: Sequence[str],
@@ -61,6 +72,8 @@ def aggregate_by_strategy(
     agg_dtype=None,
     attack_key=None,
     nbins: int = 256,
+    compression: str = "none",
+    comp_key=None,
 ):
     """Robustly aggregate a pytree over the worker axes by strategy name.
 
@@ -69,8 +82,28 @@ def aggregate_by_strategy(
     ``rs`` (which returns scattered shards and is consumed by the fsdp
     custom_vjp path, not by round programs); ``hierarchical`` needs
     exactly two worker axes (outer=DCN, inner=ICI).
+
+    ``compression`` runs each worker's LOCAL contribution through the
+    named rounds.compression codec before any collective: what the
+    strategies gather — and what the in-strategy attacks observe and
+    replace — are the decoded transmitted values.  Randomized codecs
+    fold this worker's linear axis index into ``comp_key``.  Error-
+    feedback schemes are rejected here (this dispatcher is stateless);
+    the stateful integrations thread the residual themselves.
     """
     axis_names = tuple(axis_names)
+    if compression != "none":
+        comp_lib.validate_compression_context(
+            compression, stateful=False,
+            where="the stateless aggregate_by_strategy dispatch")
+        cspec = comp_lib.get_compression(compression)
+        base = comp_key if comp_key is not None else jax.random.PRNGKey(13)
+        key = None
+        if cspec.randomized:  # per-worker stochastic draws
+            key = jax.random.fold_in(base, _worker_index(axis_names))
+        elif cspec.shared_key:  # one public per-round map for ALL workers
+            key = base
+        g, _ = comp_lib.compress_tree(compression, g, key=key)
     if strategy == "gather":
         return distributed.robust_gather_agg(
             g, axis_names, method, beta, attack, agg_dtype, attack_key=attack_key)
@@ -130,6 +163,7 @@ def make_local_update_round(
     attack=None,
     axis_names: Sequence[str] = ("data",),
     agg_dtype=None,
+    compression: str = "none",
 ):
     """Build the jitted distributed local-update round step.
 
@@ -139,14 +173,19 @@ def make_local_update_round(
     gradients meet in exactly ONE robust aggregation per round — the
     structural property tests/test_rounds.py asserts by counting
     collectives in the traced jaxpr for τ=1 vs τ≫1.  ``r`` (traced) folds
-    into the attack key so randomized attacks draw fresh noise per round.
+    into the attack key so randomized attacks draw fresh noise per round,
+    and into the compression key so stochastic codecs redraw per round.
 
     Build-time validation mirrors launch/steps: the attack's access
-    level must be reproducible by the strategy, and adaptive attacks are
+    level must be reproducible by the strategy, adaptive attacks are
     rejected (the collective strategies thread no previous-aggregate
-    state — use the single-host ``local_update_gd`` for those).
+    state — use the single-host ``local_update_gd`` for those), and so
+    are error-feedback compression schemes (the public round_step
+    signature carries no residual — local_update_gd threads it).
     """
     comm.validate_attack_strategy(attack, strategy)
+    comp_lib.validate_compression_context(
+        compression, stateful=False, where="the distributed round step")
     spec = comm.resolve_attack(attack)[0]
     if spec is not None and spec.adaptive:
         raise ValueError(
@@ -163,7 +202,9 @@ def make_local_update_round(
             lambda p: jax.value_and_grad(loss_fn)(p, batch), w, cfg.tau, eta)
         d_agg = aggregate_by_strategy(
             delta, axis_names, strategy, cfg.method, cfg.beta, attack,
-            agg_dtype, attack_key=jax.random.fold_in(jax.random.PRNGKey(0), r))
+            agg_dtype, attack_key=jax.random.fold_in(jax.random.PRNGKey(0), r),
+            compression=compression,
+            comp_key=jax.random.fold_in(jax.random.PRNGKey(11), r))
         return jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
 
     f = shard_map_compat(body, mesh, (P(), P(entry), P()), P(),
@@ -180,6 +221,7 @@ def one_round_distributed(
     attack=None,
     attack_key: Optional[jax.Array] = None,
     axis_names: Sequence[str] = ("data",),
+    compression: str = "none",
 ):
     """Algorithm 2 under ``shard_map``: solve locally per worker, aggregate
     the m local minimizers with a collective strategy, return the
@@ -196,6 +238,10 @@ def one_round_distributed(
     """
     axis_names = tuple(axis_names)
     comm.validate_attack_strategy(attack, strategy)
+    # error feedback is structurally meaningless with ONE round (the
+    # residual would never be replayed), on top of the no-state argument
+    comp_lib.validate_compression_context(
+        compression, stateful=False, where="the one-round program")
     spec = comm.resolve_attack(attack)[0]
     if spec is not None and spec.adaptive:
         raise ValueError(
@@ -207,7 +253,8 @@ def one_round_distributed(
         w_hat = local_solver(batch)
         return aggregate_by_strategy(
             w_hat, axis_names, strategy, cfg.method, cfg.beta, attack,
-            attack_key=attack_key)
+            attack_key=attack_key, compression=compression,
+            comp_key=jax.random.PRNGKey(11))
 
     entry = axis_names if len(axis_names) > 1 else axis_names[0]
     in_specs = jax.tree.map(lambda _: P(entry), worker_data)

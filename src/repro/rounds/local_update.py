@@ -48,6 +48,7 @@ from repro.attacks import engine
 from repro.core import aggregators
 from repro.core.robust_gd import _project
 from repro.rounds import comm
+from repro.rounds import compression as comp_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,10 @@ class LocalUpdateConfig:
     tau: int = 1  # local steps per communication round
     num_rounds: int = 100  # R communication rounds
     projection_radius: Optional[float] = None  # Π_W: l2 ball (None = R^d)
+    # rounds.compression scheme applied to each transmitted Δ row BEFORE
+    # the attack and the aggregation ("none" = the bit-exact uncompressed
+    # path); error-feedback residuals ride the scan carry
+    compression: str = "none"
 
 
 def _round_deltas(grads_shared, grads_local, w, worker_data, tau: int, eta):
@@ -91,6 +96,27 @@ def _round_deltas(grads_shared, grads_local, w, worker_data, tau: int, eta):
 
     (_, deltas), _ = jax.lax.scan(local_step, (ws0, g0), None, length=tau - 1)
     return deltas
+
+
+def _compress_deltas(deltas, res, name: str, r):
+    """Roundtrip the transmitted Δ rows through the rounds.compression
+    codec BEFORE the attack replaces Byzantine rows — everything
+    downstream (attack statistics included) sees the decoded transmitted
+    values.  ``r`` (may be traced) folds the stochastic-rounding key;
+    ``res`` is the per-worker error-feedback residual tree (or ``()``)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(11), r)
+    residual = None if (isinstance(res, tuple) and not res) else res
+    out, new_res = comp_lib.compress_tree_rows(name, deltas, key=key,
+                                               residual=residual)
+    return out, (() if new_res is None else new_res)
+
+
+def _init_comp_state(name: str, w0, m: int):
+    """Initial error-feedback residual for (m, ...)-stacked Δ trees —
+    ``()`` for stateless schemes so the scan carry stays minimal."""
+    if not comp_lib.get_compression(name).error_feedback:
+        return ()
+    return jax.tree.map(lambda l: jnp.zeros((m,) + l.shape, jnp.float32), w0)
 
 
 def _attack_deltas(deltas, prev_d, spec, alpha, strength, m: int, r):
@@ -135,22 +161,26 @@ def local_update_gd(
     def round_step(carry, r):
         # prev_d — the previous round's broadcast aggregate — threads
         # through the scan for ADAPTIVE attacks (ctx.prev_agg readers);
-        # per-round keys drive randomized ones.  Identical structure to
-        # robust_gd's per-iteration carry.
-        w, prev_d = carry
+        # per-round keys drive randomized ones; res is the per-worker
+        # error-feedback residual of the compression codec (() when the
+        # scheme carries none).  Identical structure to robust_gd's
+        # per-iteration carry otherwise.
+        w, prev_d, res = carry
         deltas = _round_deltas(grads_shared, grads_local, w, worker_data,
                                cfg.tau, eta)
+        deltas, res = _compress_deltas(deltas, res, cfg.compression, r)
         if attacking:
             deltas = _attack_deltas(deltas, prev_d, spec, alpha, strength, m, r)
         d_agg = jax.tree.map(agg, deltas)
         w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
         w_new = _project(w_new, cfg.projection_radius)
         metric = trajectory_fn(w_new) if trajectory_fn is not None else jnp.float32(0)
-        return (w_new, d_agg), metric
+        return (w_new, d_agg, res), metric
 
     prev0 = jax.tree.map(jnp.zeros_like, w0)
-    (w_final, _), metrics = jax.lax.scan(
-        round_step, (w0, prev0), jnp.arange(cfg.num_rounds))
+    res0 = _init_comp_state(cfg.compression, w0, m)
+    (w_final, _, _), metrics = jax.lax.scan(
+        round_step, (w0, prev0, res0), jnp.arange(cfg.num_rounds))
     return w_final, metrics
 
 
@@ -193,15 +223,16 @@ def run_local_update_rounds(
         key = (None if spec is None else spec.name, alpha, strength)
         if key not in round_fns:
             @jax.jit
-            def round_fn(w, prev_d, r):
+            def round_fn(w, prev_d, res, r):
                 deltas = _round_deltas(grads_shared, grads_local, w,
                                        worker_data, cfg.tau, eta)
+                deltas, res = _compress_deltas(deltas, res, cfg.compression, r)
                 if spec is not None and alpha > 0:
                     deltas = _attack_deltas(deltas, prev_d, spec, alpha,
                                             strength, m, r)
                 d_agg = jax.tree.map(agg, deltas)
                 w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
-                return _project(w_new, cfg.projection_radius), d_agg
+                return _project(w_new, cfg.projection_radius), d_agg, res
 
             round_fns[key] = round_fn
         return round_fns[key]
@@ -210,9 +241,13 @@ def run_local_update_rounds(
     history = []
     prev_metric = float(trajectory_fn(w)) if trajectory_fn is not None else 0.0
     prev_d = jax.tree.map(jnp.zeros_like, w0)
+    # error-feedback residual persists ACROSS the per-attack jit cache:
+    # the codec state belongs to the workers, not to the round's attack
+    comp_res = _init_comp_state(cfg.compression, w0, m)
     for r in range(cfg.num_rounds):
         attack = mixture.for_round(r, scheduler) if mixture is not None else None
-        w, d_agg = get_round_fn(attack)(w, prev_d, jnp.int32(r))
+        w, d_agg, comp_res = get_round_fn(attack)(w, prev_d, comp_res,
+                                                  jnp.int32(r))
         metric = float(trajectory_fn(w)) if trajectory_fn is not None else 0.0
         d_norm = float(jnp.linalg.norm(
             jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(d_agg)])))

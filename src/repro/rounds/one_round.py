@@ -53,6 +53,7 @@ from repro.attacks import base as attack_base
 from repro.attacks import engine
 from repro.core import aggregators
 from repro.rounds import comm
+from repro.rounds import compression as comp_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +95,7 @@ def one_round(
     cfg: OneRoundConfig = OneRoundConfig(),
     attack=None,  # AttackConfig | None (bare names/Attack specs rejected)
     key: Optional[jax.Array] = None,
+    compression: str = "none",
 ):
     """Run Algorithm 2 (single-host reference): vmap the local solver over
     workers, replace Byzantine solutions, aggregate.
@@ -104,9 +106,20 @@ def one_round(
     attacks raise too (no previous round exists).  The payload always
     runs through the repro.attacks engine.  ``key`` seeds randomized
     attacks.
+
+    ``compression`` runs each worker's transmitted solution through the
+    named rounds.compression codec BEFORE the attack, so the attack
+    observes/replaces the decoded wire values (the τ=∞ cells of the
+    comm-efficiency benchmark).  Error-feedback schemes are rejected —
+    with exactly one round the residual would never be replayed.
     """
     m = jax.tree.leaves(worker_data)[0].shape[0]
     w_hats = jax.vmap(local_solver)(worker_data)  # leaves (m, ...)
+    if compression != "none":
+        comp_lib.validate_compression_context(
+            compression, stateful=False, where="the one-round algorithm")
+        w_hats, _ = comp_lib.compress_tree_rows(
+            compression, w_hats, key=jax.random.PRNGKey(11))
     w_hats = jax.tree.map(lambda w: _attack_rows(w, attack, m, key), w_hats)
     agg = aggregators.get_aggregator(cfg.method, cfg.beta)
     return jax.tree.map(agg, w_hats)

@@ -53,13 +53,16 @@ def test_docs_exist_and_reference_sections():
     for name, needles in {
         "DESIGN.md": ["Arch-applicability", "Pallas kernel", "robust reduce-scatter",
                       "Communication rounds", "Asynchronous rounds",
-                      "Training harness", "device_steps"],
+                      "Training harness", "device_steps", "§Compression",
+                      "Error feedback", "post-decode"],
         "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis",
                            "§Communication", "§Asynchronous",
-                           "§Training throughput", "BENCH_train.json"],
+                           "§Training throughput", "BENCH_train.json",
+                           "§Compression"],
         "README.md": ["bucketed", "fsdp", "Communication efficiency",
                       "one_round_rate", "async-buffer", "effective-m",
-                      "repro.launch.train", "--device-steps"],
+                      "repro.launch.train", "--device-steps",
+                      "--compression", "Payload compression"],
     }.items():
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), name
@@ -104,6 +107,55 @@ def test_readme_strategy_table_covers_registry():
     block = _readme_block("strategies")
     for name in comm.registered_strategies():
         assert f"`{name}`" in block, f"strategy {name!r} missing from README table"
+
+
+def test_readme_compression_table_covers_registry():
+    """Every registered payload codec must appear in the generated README
+    compression table, with its bytes model and rate penalty."""
+    from repro.rounds import compression
+
+    block = _readme_block("compression")
+    for name in compression.registered_compressions():
+        assert f"`{name}`" in block, f"codec {name!r} missing from README table"
+        spec = compression.get_compression(name)
+        assert f"{spec.rate_penalty:g}x" in block
+
+
+def test_committed_robustness_has_compressed_cells():
+    """The committed ROBUSTNESS.json must carry the compressed-codec grid:
+    every registered codec appears, every gated cell passes its
+    codec-scaled bound, and no section records violations."""
+    path = os.path.join(ROOT, "ROBUSTNESS.json")
+    assert os.path.exists(path), "committed ROBUSTNESS.json missing"
+    with open(path) as f:
+        payload = json.load(f)
+    comp = payload["compressed"]
+    assert comp["violations"] == []
+    cells = comp["cells"]
+    from repro.rounds import compression
+
+    assert {c["compression"] for c in cells} == set(
+        compression.registered_compressions())
+    for c in cells:
+        assert c["ok"], c
+        assert (c["bound"] is not None) == c["gated"], c
+
+
+def test_committed_comm_grid_has_compression_axis():
+    """The committed BENCH_comm.json must sweep the codec axis and pass
+    the int8 byte-saving gate under ALIE (the tentpole's acceptance)."""
+    path = os.path.join(ROOT, "BENCH_comm.json")
+    assert os.path.exists(path), "committed BENCH_comm.json missing"
+    with open(path) as f:
+        payload = json.load(f)
+    from repro.rounds import compression
+
+    assert {r["compression"] for r in payload["records"]} == set(
+        compression.registered_compressions())
+    int8 = [g for g in payload["bytes_gates"]
+            if g["attack"] == "alie" and "bytes_saving_int8_vs_none" in g]
+    assert int8 and all(g["ok"] and g["bytes_saving_int8_vs_none"] >= 3.0
+                        for g in int8)
 
 
 def test_readme_policy_table_covers_registry():

@@ -692,5 +692,12 @@ class TestCommBenchmark:
             assert r["ok"], r
         assert payload["violations"] == []
         alie = [g for g in payload["bytes_gates"] if g["attack"] == "alie"]
-        assert alie and all(g["ok"] and g["bytes_saving_tau_ge_4"] >= 4.0
-                            for g in alie)
+        tau = [g for g in alie if "bytes_saving_tau_ge_4" in g]
+        int8 = [g for g in alie if "bytes_saving_int8_vs_none" in g]
+        assert tau and all(g["ok"] and g["bytes_saving_tau_ge_4"] >= 4.0
+                           for g in tau)
+        assert int8 and all(g["ok"] and g["bytes_saving_int8_vs_none"] >= 3.0
+                            for g in int8)
+        # the codec axis is present and every codec appears in the grid
+        comps = {r["compression"] for r in recs}
+        assert comps >= {"none", "int8", "topk", "count_sketch"}

@@ -47,6 +47,13 @@
 #                             final error violates its core/theory.py
 #                             bound (sync rate, or the effective-m async
 #                             rate for buffered cells)
+#   scripts/ci.sh resume      kill-and-resume smoke on the fed CLI: run 6
+#                             rounds uninterrupted, then 4 rounds with
+#                             --ckpt-dir (the "kill") and --resume to 6,
+#                             and FAIL unless both print the same
+#                             "final iterate sha256" line (the
+#                             rounds.engine bit-for-bit resume contract,
+#                             DESIGN.md §Round engine)
 #   scripts/ci.sh lint        ruff check (F + E9 repo-wide, pyproject.toml)
 #                             + ruff format check on scripts/ — requires
 #                             ruff on PATH; the GitHub lint job installs it
@@ -83,6 +90,26 @@ if [ "${1:-}" = "docs" ]; then
 fi
 if [ "${1:-}" = "robustness" ]; then
     exec python -m repro.attacks.matrix --smoke --json ROBUSTNESS.smoke.json
+fi
+if [ "${1:-}" = "resume" ]; then
+    tmp="$(mktemp -d)"
+    trap 'rm -rf "$tmp"' EXIT
+    common="--clients 64 --cohort 32 --chunk 8 --dim 12 --rounds 6 --lr 0.3
+            --alpha 0.25 --attack alie,sign_flip --schedule greedy
+            --method median"
+    full=$(python -m repro.fed.run $common | grep 'final iterate sha256') || exit 1
+    python -m repro.fed.run $common --rounds 4 --ckpt-dir "$tmp/ck" \
+        >/dev/null || exit 1
+    res=$(python -m repro.fed.run $common --ckpt-dir "$tmp/ck" --resume \
+        | grep 'final iterate sha256') || exit 1
+    echo "uninterrupted: $full"
+    echo "resumed:       $res"
+    if [ "$full" != "$res" ]; then
+        echo "resume smoke FAILED: final iterate digests differ" >&2
+        exit 1
+    fi
+    echo "resume smoke OK (bit-for-bit)"
+    exit 0
 fi
 if [ "${1:-}" = "lint" ]; then
     if ! command -v ruff >/dev/null 2>&1; then

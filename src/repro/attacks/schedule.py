@@ -55,6 +55,29 @@ class GreedyScheduler:
             return None
         return max(range(self.num_attacks), key=lambda i: self._damage[i])
 
+    # -- checkpoint/resume (rounds.engine snapshots) --------------------
+    # The greedy adversary is part of the run's state: its damage table
+    # decides future picks, so a resumed run must continue the SAME
+    # adversary.  The dict is JSON-serializable (python json round-trips
+    # -inf and float reprs exactly, so resumed picks are bit-identical).
+
+    def state_dict(self) -> dict:
+        return {
+            "num_attacks": self.num_attacks,
+            "reexplore": self.reexplore,
+            "damage": list(self._damage),
+            "picked": {str(r): i for r, i in self._picked.items()},
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        if state["num_attacks"] != self.num_attacks:
+            raise ValueError(
+                f"scheduler snapshot has {state['num_attacks']} attacks, "
+                f"this run has {self.num_attacks}")
+        self.reexplore = int(state["reexplore"])
+        self._damage = [float(d) for d in state["damage"]]
+        self._picked = {int(r): int(i) for r, i in state["picked"].items()}
+
 
 # Arrival-timing modes a greedy async adversary explores.  "honest"
 # means the Byzantine clients keep their simulated latencies; "first"
@@ -93,6 +116,16 @@ class ArrivalScheduler:
     def best(self) -> Optional[str]:
         idx = self._sched.best()
         return None if idx is None else self.modes[idx]
+
+    def state_dict(self) -> dict:
+        return {"modes": list(self.modes), "sched": self._sched.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        if tuple(state["modes"]) != self.modes:
+            raise ValueError(
+                f"arrival-scheduler snapshot has modes {state['modes']}, "
+                f"this run has {list(self.modes)}")
+        self._sched.load_state_dict(state["sched"])
 
 
 def schedule_indices(

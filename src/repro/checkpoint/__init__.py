@@ -1,1 +1,1 @@
-from repro.checkpoint.checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import load_extra, restore, save  # noqa: F401

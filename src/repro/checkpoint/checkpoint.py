@@ -6,6 +6,17 @@ Saves a pytree (params / optimizer state / step) to a directory:
 
 Arrays are gathered to host before saving (fine single-host; a multi-host
 deployment would swap this module for orbax — the interface is the same).
+
+Round-trip exactness (the rounds.engine resume contract relies on it):
+
+- **Typed JAX PRNG keys** (``jax.random.key``) cannot cross
+  ``np.asarray``; they are saved as their ``key_data`` uint32 arrays with
+  the impl name recorded in the manifest, and restored through
+  ``jax.random.wrap_key_data`` to the exact original dtype/impl.
+- **Non-native dtypes** (bfloat16, fp8 — npz cannot store ml_dtypes) are
+  widened to f32 on disk (lossless for bf16) and restored to the
+  RECORDED dtype from the manifest — not the template's dtype, so a
+  carelessly-f32 template cannot silently widen a bf16 checkpoint.
 """
 from __future__ import annotations
 
@@ -30,27 +41,54 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
 _NUMPY_NATIVE = set("?bhilqpBHILQPefdgFDGO")
 
 
+def _is_prng_key(x) -> bool:
+    dt = getattr(x, "dtype", None)
+    return dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key)
+
+
 def save(ckpt_dir: str, tree, step: int = 0, extra: Optional[dict] = None) -> None:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten_with_paths(tree)
-    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    dtypes = {k: str(v.dtype) for k, v in arrays.items()}
-    # npz can't store ml_dtypes (bfloat16, fp8); widen to f32 on disk —
-    # lossless for bf16 — and restore to the recorded dtype.
-    arrays = {k: (v if v.dtype.char in _NUMPY_NATIVE else v.astype(np.float32))
-              for k, v in arrays.items()}
+    arrays: Dict[str, np.ndarray] = {}
+    leaves: Dict[str, dict] = {}
+    for k, v in flat.items():
+        if _is_prng_key(v):
+            # typed key arrays: store the raw uint32 key data + impl name
+            # (np.asarray on a key-dtype array raises)
+            impl = str(jax.random.key_impl(v))
+            data = np.asarray(jax.device_get(jax.random.key_data(v)))
+            arrays[k] = data
+            leaves[k] = {"shape": list(v.shape), "dtype": "prng_key",
+                         "prng_impl": impl}
+            continue
+        a = np.asarray(jax.device_get(v))
+        leaves[k] = {"shape": list(a.shape), "dtype": str(a.dtype)}
+        # npz can't store ml_dtypes (bfloat16, fp8); widen to f32 on disk —
+        # lossless for bf16 — and restore to the recorded dtype.
+        if a.dtype.char not in _NUMPY_NATIVE:
+            a = a.astype(np.float32)
+        arrays[k] = a
     np.savez(os.path.join(ckpt_dir, "arrays.npz"), **arrays)
-    manifest = {
-        "step": step,
-        "extra": extra or {},
-        "leaves": {k: {"shape": list(v.shape), "dtype": dtypes[k]} for k, v in arrays.items()},
-    }
+    manifest = {"step": step, "extra": extra or {}, "leaves": leaves}
     with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
 
 
+def load_extra(ckpt_dir: str) -> dict:
+    """The ``extra`` metadata dict recorded at save time (host-side state
+    the rounds.engine snapshots carry: history, scheduler tables)."""
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
+
+
 def restore(ckpt_dir: str, like) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (a template pytree)."""
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Leaf values come back at the RECORDED dtype/impl — typed PRNG keys are
+    re-wrapped to their original impl, ml_dtypes leaves are narrowed back
+    from the widened on-disk f32 — regardless of the template's dtypes
+    (the template supplies structure and expected shapes only).
+    """
     with open(os.path.join(ckpt_dir, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
@@ -60,9 +98,24 @@ def restore(ckpt_dir: str, like) -> Tuple[Any, int]:
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = data[key]
-        if tuple(arr.shape) != tuple(tmpl.shape):
-            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {tmpl.shape}")
-        restored[key] = arr.astype(tmpl.dtype)
+        meta = manifest["leaves"].get(key, {})
+        if meta.get("dtype") == "prng_key":
+            val = jax.random.wrap_key_data(
+                jax.numpy.asarray(arr), impl=meta["prng_impl"])
+            tshape = tuple(getattr(tmpl, "shape", np.shape(tmpl)))
+            if tuple(val.shape) != tshape:
+                raise ValueError(
+                    f"key-shape mismatch for {key}: {val.shape} vs {tshape}")
+            restored[key] = val
+            continue
+        tshape = getattr(tmpl, "shape", np.shape(tmpl))
+        if tuple(arr.shape) != tuple(tshape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {tshape}")
+        dtype = meta.get("dtype")
+        # jax arrays out (resumed engine states feed .at[] updates etc.),
+        # narrowed back to the recorded dtype
+        restored[key] = jax.numpy.asarray(
+            arr, dtype=jax.numpy.dtype(dtype) if dtype else None)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     keys = list(_flatten_with_paths(like).keys())
     new_leaves = [restored[k] for k in keys]

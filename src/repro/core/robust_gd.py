@@ -43,19 +43,23 @@ def _project(w, radius: Optional[float]):
     return unravel(flat * scale)
 
 
-def robust_gd(
-    loss_fn: Callable,  # loss_fn(w, batch) -> scalar; batch leaves (n, ...)
-    w0,
-    worker_data,  # pytree with leaves (m, n, ...): worker-sharded dataset
+def make_robust_gd_stages(
+    loss_fn: Callable,
+    worker_data,
     cfg: RobustGDConfig,
     attack: Optional[AttackConfig] = None,
     trajectory_fn: Optional[Callable] = None,
 ):
-    """Run Algorithm 1 and return (w_T, per-iteration metrics).
+    """Algorithm 1 as a rounds.engine stage configuration.
 
-    ``trajectory_fn(w) -> scalar`` is evaluated each iteration (e.g.
-    ‖w − w*‖₂) and stacked into the returned metrics.
+    The stages reproduce the original scan body exactly — same vmap
+    layout (in_axes=(None, 0)), same per-iteration attack keys
+    (fold_in(PRNGKey(0), i)), same aggregate carry for adaptive attacks —
+    so the engine run is bit-for-bit the legacy loop (pinned by
+    tests/test_engine_equivalence.py).
     """
+    from repro.rounds import engine
+
     m = jax.tree.leaves(worker_data)[0].shape[0]
     grad_fn = jax.grad(loss_fn)
     per_worker_grads = jax.vmap(grad_fn, in_axes=(None, 0))
@@ -64,29 +68,63 @@ def robust_gd(
     attacking = attack is not None and attack.alpha > 0
     base_key = jax.random.PRNGKey(0)
 
-    def step(carry, i):
-        # prev_g — the previous round's broadcast aggregate — is threaded
-        # through the scan so ADAPTIVE attacks (repro.attacks: stale, and
-        # anything reading ctx.prev_agg) see the trajectory, per-round keys
-        # drive randomized ones.
-        w, prev_g = carry
-        grads = per_worker_grads(w, worker_data)  # leaves (m, ...)
-        if attacking:
+    atk_fn = None
+    if attacking:
+        def atk_fn(grads, prev_g, i):
             k = jax.random.fold_in(base_key, i)
-            grads = jax.tree.map(
+            return jax.tree.map(
                 lambda g, p: apply_gradient_attack(
                     attack, g, mask, key=k, prev_agg=p, rnd=i),
                 grads, prev_g)
-        g = jax.tree.map(agg, grads)
-        w_new = jax.tree.map(lambda p, d: p - cfg.step_size * d, w, g)
-        w_new = _project(w_new, cfg.projection_radius)
-        metric = trajectory_fn(w_new) if trajectory_fn is not None else jnp.float32(0)
-        return (w_new, g), metric
 
-    prev0 = jax.tree.map(jnp.zeros_like, w0)
-    (w_final, _), metrics = jax.lax.scan(
-        step, (w0, prev0), jnp.arange(cfg.num_iters))
-    return w_final, metrics
+    def update(w, opt_state, g, i):
+        w_new = jax.tree.map(lambda p, d: p - cfg.step_size * d, w, g)
+        return _project(w_new, cfg.projection_radius), opt_state
+
+    return engine.RoundStages(
+        local_work=lambda w, i: per_worker_grads(w, worker_data),
+        aggregate=lambda grads: jax.tree.map(agg, grads),
+        update=update,
+        attack=atk_fn,
+        emit=((lambda w_new, g: trajectory_fn(w_new))
+              if trajectory_fn is not None else None),
+    )
+
+
+def robust_gd(
+    loss_fn: Callable,  # loss_fn(w, batch) -> scalar; batch leaves (n, ...)
+    w0,
+    worker_data,  # pytree with leaves (m, n, ...): worker-sharded dataset
+    cfg: RobustGDConfig,
+    attack: Optional[AttackConfig] = None,
+    trajectory_fn: Optional[Callable] = None,
+    *,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume=False,
+):
+    """Run Algorithm 1 and return (w_T, per-iteration metrics).
+
+    ``trajectory_fn(w) -> scalar`` is evaluated each iteration (e.g.
+    ‖w − w*‖₂) and stacked into the returned metrics.
+
+    A thin stage configuration over the unified round engine
+    (rounds.engine): the per-iteration computation is unchanged — the
+    engine threads the (iterate, prev-aggregate) carry for ADAPTIVE
+    attacks and folds per-iteration keys for randomized ones.  With
+    ``ckpt_every``/``ckpt_dir`` a RoundState snapshot is written every
+    ``ckpt_every`` iterations; ``resume=True`` (or a round index)
+    continues bit-for-bit from the snapshot.
+    """
+    from repro.rounds import engine
+
+    stages = make_robust_gd_stages(loss_fn, worker_data, cfg, attack,
+                                   trajectory_fn)
+    state = engine.make_state(w0)
+    state, metrics = engine.run_scan(
+        stages, state, cfg.num_iters,
+        ckpt_every=ckpt_every, ckpt_dir=ckpt_dir, resume=resume)
+    return state["w"], metrics
 
 
 def make_worker_shards(data, m: int):

@@ -187,6 +187,10 @@ def run_async_rounds(
     arrival: ArrivalConfig = ArrivalConfig(),
     mixture: AttackMixture = AttackMixture(),
     w0: Optional[jax.Array] = None,
+    *,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume=False,
 ):
     """Run the buffered async server loop; returns (w_final, history).
 
@@ -196,7 +200,17 @@ def run_async_rounds(
     arrival time; the sync engine's would be the max), ``buffer`` (rows
     aggregated after policy drops), ``staleness_mean`` (mean staleness
     of the buffer), ``pending`` (in-flight reports carried to the next
-    round), and ``timing`` (the Byzantine arrival mode in effect)."""
+    round), and ``timing`` (the Byzantine arrival mode in effect).
+
+    ``ckpt_every``/``ckpt_dir``/``resume`` snapshot and restore the FULL
+    async state through rounds.engine: the device side (iterate,
+    optimizer state, broadcast-aggregate and iterate histories at every
+    staleness depth) plus the host side (the in-flight pending queue,
+    history, both greedy schedulers — attack AND arrival timing), so a
+    killed run resumes bit-for-bit: same buffers, same staleness groups,
+    same adversary."""
+    from repro.rounds import engine as round_engine
+
     if rcfg.compression != "none":
         # the staleness regrouping path recomputes rows per depth and does
         # not thread codec state — half-applying the codec on the fresh
@@ -221,8 +235,38 @@ def run_async_rounds(
     # arrivals that missed their round's buffer
     pending: list = []
     n_join = int(math.ceil(arrival.churn * rcfg.cohort_size))
+    start = 0
 
-    for r in range(rcfg.num_rounds):
+    def _snap_state(rnd: int) -> dict:
+        return {
+            "w": w, "prev_agg": prev_g if prev_g is not None else
+            jnp.zeros((pop.cfg.dim,)),
+            "opt_state": state, "key": root, "round": jnp.int32(rnd),
+            "agg_hist": agg_hist, "w_hist": jnp.stack(w_hist),
+        }
+
+    if resume is not False and resume is not None:
+        if ckpt_dir is None:
+            raise ValueError("resume=True needs ckpt_dir")
+        rnd = None if resume is True else int(resume)
+        if rnd is not None or round_engine.latest_round(ckpt_dir) is not None:
+            snap, host = round_engine.load_snapshot(ckpt_dir, _snap_state(0),
+                                                    rnd)
+            w, state, prev_g = snap["w"], snap["opt_state"], snap["prev_agg"]
+            agg_hist = snap["agg_hist"]
+            w_hist = [snap["w_hist"][i] for i in range(H)]
+            start = int(snap["round"])
+            pending = [(int(c), int(b), float(t)) for c, b, t
+                       in host.get("pending", [])]
+            history = list(host.get("history", []))
+            prev_err = float(host.get("prev_err", prev_err))
+            if scheduler is not None and host.get("scheduler") is not None:
+                scheduler.load_state_dict(host["scheduler"])
+            if host.get("timing_sched") is not None:
+                timing_sched = ArrivalScheduler()
+                timing_sched.load_state_dict(host["timing_sched"])
+
+    for r in range(start, rcfg.num_rounds):
         attack = mixture.for_round(r, scheduler)
         ids = pop.sample_cohort(jax.random.fold_in(root, r), rcfg.cohort_size)
         arr_key = jax.random.fold_in(arr_root, r)
@@ -347,4 +391,14 @@ def run_async_rounds(
             "pending": len(pending),
             "timing": timing,
         })
+        if ckpt_every and ckpt_dir and (r + 1) % ckpt_every == 0:
+            round_engine.save_snapshot(ckpt_dir, _snap_state(r + 1), host={
+                "pending": [list(p) for p in pending],
+                "history": history,
+                "prev_err": prev_err,
+                "scheduler": (scheduler.state_dict()
+                              if scheduler is not None else None),
+                "timing_sched": (timing_sched.state_dict()
+                                 if timing_sched is not None else None),
+            })
     return w, history

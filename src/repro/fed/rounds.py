@@ -251,48 +251,90 @@ def run_rounds(
     rcfg: RoundConfig,
     mixture: AttackMixture = AttackMixture(),
     w0: Optional[jax.Array] = None,
+    *,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume=False,
 ):
     """Run the server loop; returns (w_final, history).
 
     history[r] = {"round", "attack", "grad_norm", "err"} with
     ``err = ‖w_r − w*‖₂`` against the population optimum (the quantity
     the paper's Δ bounds — see core.theory).
+
+    Runs on rounds.engine's scheduled driver with an EAGER round body:
+    the streaming sketch applies codec and attack inside its chunk
+    stream, so the fed round doesn't decompose into the engine's payload
+    stage slots — it plugs in as a custom body over the same RoundState
+    (iterate, prev broadcast aggregate, per-client error-feedback
+    residual, optimizer state, cohort-sampling root key).  Eager
+    execution is the legacy regime, so trajectories are bit-identical.
+    ``ckpt_every``/``ckpt_dir`` snapshot that state (plus history and the
+    greedy scheduler's damage table) every ``ckpt_every`` rounds;
+    ``resume=True`` (or a round index) continues bit-for-bit — the same
+    cohorts, the same adversary.
     """
+    from repro.rounds import engine as round_engine
+
     opt = get_optimizer(rcfg.optimizer, rcfg.lr)
     w = jnp.zeros((pop.cfg.dim,)) if w0 is None else w0
-    state = opt.init(w)
-    root = jax.random.PRNGKey(rcfg.seed)
-    scheduler = mixture.make_scheduler()
-    history = []
-    prev_g = None  # previous round's broadcast aggregate (adaptive attacks)
-    prev_err = float(jnp.linalg.norm(w - pop.w_star))
-    comp_res = init_comp_residual(pop, rcfg)
-    for r in range(rcfg.num_rounds):
-        attack = mixture.for_round(r, scheduler)
-        ids = pop.sample_cohort(jax.random.fold_in(root, r), rcfg.cohort_size)
-        g = aggregate_cohort(pop, w, ids, rcfg, attack, prev_agg=prev_g, rnd=r,
-                             comp_res=comp_res)
-        if comp_res is not None:
-            comp_res = update_comp_residual(pop, w, ids, rcfg, comp_res, r)
-        # adaptive attacks must see the aggregate at TRANSMITTED-delta
-        # scale (what the clients observe broadcast), not the rescaled
-        # optimizer input — matches rounds.local_update_gd semantics
-        prev_g = g
-        if rcfg.local_steps > 1:
-            # rescale the aggregated Σ-of-local-gradients delta to a mean
-            # local gradient so optimizer lr semantics match local_steps=1
-            g = g / rcfg.local_steps
-        w, state = opt.update(g, state, w, jnp.int32(r))
-        err = float(jnp.linalg.norm(w - pop.w_star))
-        if scheduler is not None:
-            # the adversary's reward: how much this round moved the model
-            # AWAY from the optimum (observable drift — see attacks.schedule)
-            scheduler.feedback(r, err - prev_err)
-        prev_err = err
-        history.append({
+    comp_res0 = init_comp_residual(pop, rcfg)
+
+    def round_fn_for(attack):
+        def fn(state, r):
+            w = state["w"]
+            comp_res = state["comp_res"]
+            if isinstance(comp_res, tuple) and not comp_res:
+                comp_res = None
+            # round 0 has no broadcast aggregate yet (legacy prev_g=None);
+            # any later round — including a resumed one — reads it from
+            # the carried state
+            prev_g = None if r == 0 else state["prev_agg"]
+            ids = pop.sample_cohort(jax.random.fold_in(state["key"], r),
+                                    rcfg.cohort_size)
+            g = aggregate_cohort(pop, w, ids, rcfg, attack, prev_agg=prev_g,
+                                 rnd=r, comp_res=comp_res)
+            if comp_res is not None:
+                comp_res = update_comp_residual(pop, w, ids, rcfg, comp_res, r)
+            # adaptive attacks must see the aggregate at TRANSMITTED-delta
+            # scale (what the clients observe broadcast), not the rescaled
+            # optimizer input — matches rounds.local_update_gd semantics
+            prev_g = g
+            if rcfg.local_steps > 1:
+                # rescale the aggregated Σ-of-local-gradients delta to a
+                # mean local gradient so optimizer lr semantics match
+                # local_steps=1
+                g = g / rcfg.local_steps
+            w_new, opt_state = opt.update(g, state["opt_state"], w,
+                                          jnp.int32(r))
+            new_state = dict(state, w=w_new, prev_agg=prev_g,
+                             comp_res=() if comp_res is None else comp_res,
+                             opt_state=opt_state, round=jnp.int32(r) + 1)
+            return new_state, {"g": g}
+
+        return fn
+
+    def record(r, attack, state, extras):
+        return {
             "round": r,
             "attack": attack.name if attack is not None else "none",
-            "grad_norm": float(jnp.linalg.norm(g)),
-            "err": err,
-        })
-    return w, history
+            "grad_norm": float(jnp.linalg.norm(extras["g"])),
+            "err": float(jnp.linalg.norm(state["w"] - pop.w_star)),
+        }
+
+    def damage(entry, prev):
+        # the adversary's reward: how much this round moved the model
+        # AWAY from the optimum (observable drift — see attacks.schedule)
+        return entry["err"] - prev["err"]
+
+    state = round_engine.make_state(
+        w,
+        comp_res=() if comp_res0 is None else comp_res0,
+        opt_state=opt.init(w),
+        key=jax.random.PRNGKey(rcfg.seed))
+    state, history = round_engine.run_scheduled(
+        round_fn_for, state, rcfg.num_rounds, mixture=mixture, record=record,
+        damage=damage,
+        init_entry={"err": float(jnp.linalg.norm(w - pop.w_star))},
+        ckpt_every=ckpt_every, ckpt_dir=ckpt_dir, resume=resume)
+    return state["w"], history

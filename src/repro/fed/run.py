@@ -112,7 +112,29 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--buffer-timeout", type=float, default=None,
                    help="close an under-full buffer at this simulated "
                         "time (default: wait for the K-th arrival)")
+    # deterministic mid-run checkpoint/resume (rounds.engine snapshots)
+    p.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                   help="write a RoundState snapshot (iterate, optimizer "
+                        "state, prev aggregate, residuals, scheduler "
+                        "tables) every --ckpt-every rounds")
+    p.add_argument("--ckpt-every", type=int, default=1, metavar="N",
+                   help="snapshot period in rounds (with --ckpt-dir)")
+    p.add_argument("--resume", action="store_true",
+                   help="continue from the latest snapshot in --ckpt-dir "
+                        "(bit-for-bit identical to the uninterrupted run; "
+                        "a fresh directory starts from scratch)")
     return p
+
+
+def _iterate_digest(w) -> str:
+    """sha256 of the final iterate's bytes — what the CI resume smoke
+    compares between an uninterrupted run and a killed-and-resumed one
+    (bit-for-bit, not tolerance-based)."""
+    import hashlib
+
+    import numpy as np
+
+    return hashlib.sha256(np.asarray(w).tobytes()).hexdigest()
 
 
 def main(argv=None) -> int:
@@ -143,6 +165,13 @@ def main(argv=None) -> int:
           f"nbins={rcfg.nbins}, tau={rcfg.local_steps}, "
           f"compression={rcfg.compression}")
     mixture = AttackMixture(attacks, schedule=args.schedule)
+    ckpt_kwargs = dict(
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        resume=bool(args.resume))
+    if args.ckpt_dir:
+        print(f"checkpoint: dir={args.ckpt_dir} every={args.ckpt_every} "
+              f"resume={args.resume}")
     if args.async_buffer > 0:
         acfg = AsyncConfig(
             buffer_k=args.async_buffer, max_staleness=args.staleness_cap,
@@ -154,7 +183,8 @@ def main(argv=None) -> int:
         print(f"async: buffer k={acfg.buffer_k}, policy={acfg.policy}, "
               f"latency={arr.latency}, dropout={arr.dropout}, "
               f"churn={arr.churn}")
-        w, history = run_async_rounds(pop, rcfg, acfg, arr, mixture)
+        w, history = run_async_rounds(pop, rcfg, acfg, arr, mixture,
+                                      **ckpt_kwargs)
         for h in history:
             print(f"  round {h['round']:3d}  attack={h['attack']:<12s} "
                   f"|g|={h['grad_norm']:9.4f}  |w-w*|={h['err']:.4f}  "
@@ -165,8 +195,9 @@ def main(argv=None) -> int:
             min(args.async_buffer, args.cohort), dropout=args.dropout)
         print(f"final |w-w*| = {history[-1]['err']:.4f}   "
               f"(effective-m async rate = {rate:.4f})")
+        print(f"final iterate sha256 = {_iterate_digest(w)}")
         return 0
-    w, history = run_rounds(pop, rcfg, mixture)
+    w, history = run_rounds(pop, rcfg, mixture, **ckpt_kwargs)
     for h in history:
         print(f"  round {h['round']:3d}  attack={h['attack']:<12s} "
               f"|g|={h['grad_norm']:9.4f}  |w-w*|={h['err']:.4f}")
@@ -174,6 +205,7 @@ def main(argv=None) -> int:
     rate = theory.optimal_rate(args.alpha, args.samples_per_client, args.cohort)
     print(f"final |w-w*| = {final:.4f}   "
           f"(order-optimal rate alpha/sqrt(n)+1/sqrt(n*m) = {rate:.4f})")
+    print(f"final iterate sha256 = {_iterate_digest(w)}")
     return 0
 
 

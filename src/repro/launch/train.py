@@ -73,7 +73,18 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--attn-chunk", type=int, default=0, help="0 = plain attention")
     ap.add_argument("--log-every", type=int, default=1, help="in windows")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="save a final params checkpoint here on exit")
+    # deterministic mid-run checkpoint/resume (rounds.engine snapshots)
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="snapshot the full window state every "
+                         "--ckpt-every windows")
+    ap.add_argument("--ckpt-every", type=int, default=1, metavar="N",
+                    help="snapshot period in windows (with --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest snapshot in --ckpt-dir "
+                         "(bit-for-bit; a fresh directory starts from "
+                         "scratch)")
     return ap
 
 
@@ -110,7 +121,10 @@ def main(argv=None) -> int:
               f"|g| {met['grad_norm']:.3f}")
 
     result = trainer.train_loop(cfg, pcfg, tcfg, mesh, dcfg=dcfg, attack=attack,
-                                log_every=args.log_every, on_window=on_window)
+                                log_every=args.log_every, on_window=on_window,
+                                ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+                                ckpt_dir=args.ckpt_dir,
+                                resume=bool(args.resume))
     print(f"done: {result.steps} steps in windows of {result.device_steps}  "
           f"compile {result.compile_s:.2f}s  "
           f"steady {result.steps_per_s:.2f} steps/s  "

@@ -310,13 +310,26 @@ def train_loop(
     attack: Optional[AttackConfig] = None,
     log_every: int = 1,  # in windows
     on_window: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    ckpt_every: int = 0,  # in WINDOWS (snapshots land on window boundaries)
+    ckpt_dir: Optional[str] = None,
+    resume=False,
 ) -> TrainResult:
     """Run ``tcfg.steps`` optimizer steps in windows of
     ``tcfg.device_steps``: build a batch block on the host, hand it to
     the donated window step, read metric deltas at the boundary.  The
     first window's wall time is reported separately as ``compile_s`` so
     ``steps_per_s``/``tokens_per_s`` measure the steady state.
+
+    ``ckpt_every``/``ckpt_dir`` write a rounds.engine snapshot of the
+    full window state (params, optimizer state, compression residual,
+    step, attack-key base, running metric sums) every ``ckpt_every``
+    windows; ``resume=True`` (or a step index) restores it and continues
+    bit-for-bit — batch blocks are stateless functions of the step
+    index, so the resumed window sequence replays the identical HLO on
+    the identical state.
     """
+    from repro.rounds import engine as round_engine
+
     ds = tcfg.device_steps
     if tcfg.steps % ds != 0:
         raise ValueError(
@@ -330,15 +343,35 @@ def train_loop(
     state = init_state(cfg, mesh, opt, seed=tcfg.seed, pcfg=pcfg)
 
     history: List[Dict[str, float]] = []
+    start_w = 0
+    if resume is not False and resume is not None:
+        if ckpt_dir is None:
+            raise ValueError("resume=True needs ckpt_dir")
+        rnd = None if resume is True else int(resume)
+        if rnd is not None or round_engine.latest_round(ckpt_dir) is not None:
+            snap, host = round_engine.load_snapshot(
+                ckpt_dir, dict(state, round=jnp.int32(0)), rnd)
+            snap.pop("round")
+            # restored leaves go back to the template's MESH shardings
+            # (the donated window step was compiled against them);
+            # scalar/key leaves stay uncommitted so jit replicates them
+            # exactly like the fresh-init path
+            state = jax.tree.map(
+                lambda t, v: (jax.device_put(v, t.sharding)
+                              if isinstance(t.sharding, NamedSharding)
+                              else jnp.asarray(v)), state, snap)
+            history = list(host.get("history", []))
+            start_w = int(state["step"]) // ds
     snapshot = {k: float(v) for k, v in state["metrics"].items()}
     n_windows = tcfg.steps // ds
     compile_s = train_s = 0.0
     window_times: List[float] = []
-    for w in range(n_windows):
+    t_train = time.perf_counter()
+    for w in range(start_w, n_windows):
         batches = stack_window_batches(dcfg, w * ds, ds, mesh, attack, cfg)
         t0 = time.perf_counter()
         state = window(state, batches)
-        if w == 0:
+        if w == start_w:
             jax.block_until_ready(state["params"])
             compile_s = time.perf_counter() - t0
         else:
@@ -354,12 +387,16 @@ def train_loop(
             history.append(met)
             if on_window is not None:
                 on_window(w, met)
-        if w == 0:
+        if ckpt_every and ckpt_dir and (w + 1) % ckpt_every == 0:
+            round_engine.save_snapshot(
+                ckpt_dir, dict(state, round=state["step"]),
+                host={"history": history})
+        if w == start_w:
             # restart the clock after the compile+first-execute window
             t_train = time.perf_counter()
     jax.block_until_ready(state["params"])
-    train_s = time.perf_counter() - t_train if n_windows > 1 else 0.0
-    steady_steps = tcfg.steps - ds
+    train_s = time.perf_counter() - t_train if n_windows - start_w > 1 else 0.0
+    steady_steps = max((n_windows - start_w) * ds - ds, 0)
     steps_per_s = steady_steps / train_s if train_s > 0 else 0.0
     tokens = dcfg.global_batch * dcfg.seq_len
     return TrainResult(

@@ -7,6 +7,11 @@ aggregation computes (core.aggregators) or WHICH collective carries it
 - ``comm``         per-strategy byte accounting (:class:`CommBudget`,
                    the StrategySpec registry feeding the generated docs)
                    and build-time attack-vs-strategy access validation;
+- ``engine``       the unified round engine: pluggable (local-work,
+                   compression, attack, aggregation) stages over one
+                   RoundState carry, scan/scheduled drivers, and the
+                   deterministic checkpoint/resume snapshots every loop
+                   (core.robust_gd, local_update, fed.rounds) runs on;
 - ``one_round``    Algorithm 2 (paper Section 5, Theorem 7): vmap
                    reference, streaming-histogram federated scale;
 - ``local_update`` robust local-update GD — τ local steps per robust
@@ -26,6 +31,18 @@ from repro.rounds.comm import (  # noqa: F401
     registered_strategies,
     resolve_attack,
     validate_attack_strategy,
+)
+from repro.rounds.engine import (  # noqa: F401
+    RoundStages,
+    ScanRunner,
+    latest_round,
+    load_snapshot,
+    make_round_body,
+    make_state,
+    run_scan,
+    run_scheduled,
+    save_snapshot,
+    snapshot_rounds,
 )
 from repro.rounds.distributed import (  # noqa: F401
     aggregate_by_strategy,

@@ -1,0 +1,415 @@
+"""Unified round engine: one scan-based loop under every round program.
+
+The paper's three algorithm families were implemented as three divergent
+loops — ``core.robust_gd.robust_gd`` (Algorithm 1), ``rounds.local_update``
+(the τ-interpolation) and ``fed.rounds.run_rounds`` (federated cohort
+rounds) — each re-implementing per-round PRNG keys, the previous-aggregate
+carry that adaptive attacks read, compression-residual state and jit
+caching.  This module collapses the shared structure (the iterative
+robust-GD template of Chen et al. 2017) into ONE engine with:
+
+- a uniform :data:`RoundState` (iterate, PRNG key, previous broadcast
+  aggregate, compression residuals, optimizer state, round index) — the
+  exact snapshot the checkpoint/resume contract serializes;
+- pluggable stages (:class:`RoundStages`): local-work → compression →
+  attack → aggregation → update, composed into one round body by
+  :func:`make_round_body`.  The stage order is the wire order — attacks
+  observe and replace DECODED transmitted values, after the codec;
+- two drivers sharing the state/checkpoint machinery:
+
+  * :func:`run_scan` — the donated-buffer ``lax.scan`` driver for
+    round-invariant stage configurations (a fixed attack): the whole run
+    is one scan, or ``ckpt_every``-aligned scan segments with a
+    :class:`RoundState` snapshot written at every boundary.  Segmenting
+    is bit-for-bit invisible (pinned by tests/test_engine_equivalence).
+  * :func:`run_scheduled` — the host driver for per-round attack
+    SCHEDULES (fed.rounds.AttackMixture, incl. the greedy adaptive
+    adversary): picks the round's attack, runs a per-attack cached round
+    function (jitted scan-of-one for the vmap reference loops, eager for
+    the federated streaming path whose chunk loop is host-side), records
+    history, feeds the scheduler its damage signal, and snapshots state
+    + host state (history, scheduler) at ``ckpt_every`` boundaries.
+
+Determinism contract: every per-round random draw folds a CONSTANT base
+key with the absolute round index (``fold_in(base, r)``), and all
+cross-round state lives in :data:`RoundState` — so resuming from the
+snapshot written after round r−1 replays rounds r..R with bit-for-bit
+the same results as the uninterrupted run (kill-at-any-round pin in
+tests/test_engine_equivalence.py).  Host-side adversary state (the
+greedy scheduler's damage table) snapshots alongside via
+``GreedyScheduler.state_dict``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt_lib
+
+# ---------------------------------------------------------------------------
+# RoundState
+# ---------------------------------------------------------------------------
+
+#: The engine's cross-round state — a plain dict pytree so it runs through
+#: scan carries, jit donation and checkpoint/checkpoint.py unchanged:
+#:   w         the shared iterate (pytree)
+#:   prev_agg  the previous round's broadcast aggregate, TRANSMITTED scale
+#:             (what adaptive attacks read; zeros before round 0)
+#:   comp_res  compression error-feedback residual (``()`` when stateless)
+#:   opt_state optimizer state (``()`` for plain GD updates)
+#:   key       the run's base PRNG key (per-round keys fold the round index)
+#:   round     int32 — the NEXT round to execute
+RoundState = Dict[str, Any]
+
+
+def make_state(
+    w0,
+    *,
+    prev_agg=None,
+    comp_res=(),
+    opt_state=(),
+    key: Optional[jax.Array] = None,
+    rnd: int = 0,
+) -> RoundState:
+    """Fresh engine state at round ``rnd`` (defaults: zero prev-aggregate,
+    stateless compression, no optimizer state, base key PRNGKey(0)).
+
+    Leaves are COPIED: the scan runner donates the state buffers
+    (``donate_argnums=0``), so the engine must own them — without the
+    copy the caller's ``w0`` would be invalidated by the first run.
+    """
+    if prev_agg is None:
+        prev_agg = jax.tree.map(jnp.zeros_like, w0)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return _copy_tree({
+        "w": w0,
+        "prev_agg": prev_agg,
+        "comp_res": comp_res,
+        "opt_state": opt_state,
+        "key": key,
+        "round": jnp.int32(rnd),
+    })
+
+
+def _copy_tree(tree):
+    def copy_leaf(x):
+        if isinstance(x, jax.Array):
+            return x.copy()
+        return jnp.asarray(x)
+
+    return jax.tree.map(copy_leaf, tree)
+
+
+# ---------------------------------------------------------------------------
+# Stages → round body
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundStages:
+    """The pluggable stages of one communication round.
+
+    ``local_work(w, r) -> payload``: the transmitted per-worker payload
+    (stacked gradient/delta rows for the reference loops).
+    ``aggregate(payload) -> agg``: the robust aggregation.
+    ``update(w, opt_state, agg, r) -> (w_new, opt_state)``: the server
+    step (plain GD + projection, or a repro.optim optimizer).
+    ``compress(payload, comp_res, r) -> (payload, comp_res)``: the wire
+    codec (None = no codec stage; runs BEFORE the attack so adversaries
+    see decoded transmitted values).
+    ``attack(payload, prev_agg, r) -> payload``: Byzantine row
+    replacement (None = clean).
+    ``emit(w_new, agg) -> outs``: per-round scan outputs (None emits a
+    zero scalar, keeping legacy metric stacking shapes).
+    """
+
+    local_work: Callable
+    aggregate: Callable
+    update: Callable
+    compress: Optional[Callable] = None
+    attack: Optional[Callable] = None
+    emit: Optional[Callable] = None
+
+
+def make_round_body(stages: RoundStages) -> Callable:
+    """Compose the stages into ``body(state, r) -> (state, outs)`` — the
+    ONE round template every driver (scan segments, per-attack jit, the
+    eager federated path) executes."""
+
+    def body(state: RoundState, r):
+        payload = stages.local_work(state["w"], r)
+        comp_res = state["comp_res"]
+        if stages.compress is not None:
+            payload, comp_res = stages.compress(payload, comp_res, r)
+        if stages.attack is not None:
+            payload = stages.attack(payload, state["prev_agg"], r)
+        agg = stages.aggregate(payload)
+        w_new, opt_state = stages.update(state["w"], state["opt_state"], agg, r)
+        outs = stages.emit(w_new, agg) if stages.emit is not None else jnp.float32(0)
+        new_state = dict(state, w=w_new, prev_agg=agg, comp_res=comp_res,
+                         opt_state=opt_state, round=jnp.int32(r) + 1)
+        return new_state, outs
+
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+_LATEST = "LATEST"
+
+
+def _snapshot_dir(ckpt_dir: str, rnd: int) -> str:
+    return os.path.join(ckpt_dir, f"round_{rnd:08d}")
+
+
+def snapshot_rounds(ckpt_dir: str) -> List[int]:
+    """All round indices with a snapshot under ``ckpt_dir`` (ascending)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("round_") and os.path.exists(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(name[len("round_"):]))
+    return sorted(out)
+
+
+def latest_round(ckpt_dir: str) -> Optional[int]:
+    """Round index of the most recent snapshot (None when no snapshot)."""
+    marker = os.path.join(ckpt_dir, _LATEST)
+    if os.path.exists(marker):
+        with open(marker) as f:
+            return int(f.read().strip())
+    rounds = snapshot_rounds(ckpt_dir)
+    return rounds[-1] if rounds else None
+
+
+def save_snapshot(ckpt_dir: str, state: RoundState,
+                  host: Optional[dict] = None) -> str:
+    """Write the :data:`RoundState` snapshot after round ``round−1`` (i.e.
+    ``state["round"]`` is the next round to run) plus JSON-serializable
+    host state (history, scheduler damage tables) into
+    ``ckpt_dir/round_XXXXXXXX/`` and advance the LATEST marker."""
+    rnd = int(state["round"])
+    d = _snapshot_dir(ckpt_dir, rnd)
+    ckpt_lib.save(d, state, step=rnd, extra={"host": host or {}})
+    tmp = os.path.join(ckpt_dir, _LATEST + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(str(rnd))
+    os.replace(tmp, os.path.join(ckpt_dir, _LATEST))
+    return d
+
+
+def load_snapshot(ckpt_dir: str, like: RoundState,
+                  rnd: Optional[int] = None) -> Tuple[RoundState, dict]:
+    """Restore ``(state, host)`` from the snapshot at round ``rnd``
+    (default: the latest).  ``like`` is the template the fresh run would
+    start from — restored leaves keep the recorded dtypes (incl. typed
+    PRNG keys and bf16, see checkpoint/checkpoint.py)."""
+    if rnd is None:
+        rnd = latest_round(ckpt_dir)
+        if rnd is None:
+            raise FileNotFoundError(f"no engine snapshot under {ckpt_dir!r}")
+    d = _snapshot_dir(ckpt_dir, rnd)
+    state, _step = ckpt_lib.restore(d, like)
+    extra = ckpt_lib.load_extra(d)
+    return state, extra.get("host", {})
+
+
+def _maybe_resume(state: RoundState, ckpt_dir: Optional[str],
+                  resume: Union[bool, int]) -> Tuple[RoundState, dict, int]:
+    """Shared resume entry of both drivers: ``resume`` is False (fresh),
+    True (latest snapshot) or an int round (that snapshot, for the
+    kill-at-round-r tests).  Returns (state, host, start_round)."""
+    if resume is False or resume is None:
+        return state, {}, int(state["round"])
+    if ckpt_dir is None:
+        raise ValueError("resume=True needs ckpt_dir")
+    rnd = None if resume is True else int(resume)
+    if rnd is None and latest_round(ckpt_dir) is None:
+        # fresh directory: a resume-requested run starts from scratch so
+        # the CLI's --resume is idempotent on first launch
+        return state, {}, int(state["round"])
+    state, host = load_snapshot(ckpt_dir, state, rnd)
+    return state, host, int(state["round"])
+
+
+# ---------------------------------------------------------------------------
+# Driver 1: donated-buffer scan segments (static stage configuration)
+# ---------------------------------------------------------------------------
+
+
+class ScanRunner:
+    """Per-stage-configuration cache of scan segments.
+
+    Two execution regimes, chosen once per runner:
+
+    - ``jit=True`` — one compiled executable per segment LENGTH (the
+      round index enters as a traced offset, so segments starting at
+      different rounds share the compilation); the carry is donated, so
+      long runs update the :data:`RoundState` buffers in place.
+    - ``jit=False`` — the segment runs as a bare (eager) ``lax.scan``.
+
+    XLA fuses a whole-jitted scan differently from an eagerly dispatched
+    one (~1-ULP drift in reductions), so the regimes are NOT bit-equal to
+    each other — but each is bit-stable under segmentation, which is the
+    resume contract.  Legacy wrappers keep their historical regime
+    (``robust_gd``/``local_update_gd`` ran eager scans) so existing
+    golden pins hold; new throughput-oriented callers use ``jit=True``.
+    """
+
+    def __init__(self, stages_or_body: Union[RoundStages, Callable],
+                 jit: bool = True):
+        self._body = (make_round_body(stages_or_body)
+                      if isinstance(stages_or_body, RoundStages)
+                      else stages_or_body)
+        self._jit = jit
+        self._cache: Dict[int, Callable] = {}
+
+    def segment(self, length: int) -> Callable:
+        fn = self._cache.get(length)
+        if fn is None:
+            body = self._body
+
+            def run(state, r0):
+                return jax.lax.scan(body, state, r0 + jnp.arange(length))
+
+            fn = jax.jit(run, donate_argnums=0) if self._jit else run
+            self._cache[length] = fn
+        return fn
+
+    def __call__(self, state: RoundState, r0: int, length: int):
+        return self.segment(length)(state, jnp.int32(r0))
+
+
+def _concat_outs(chunks: List[Any]):
+    if len(chunks) == 1:
+        return chunks[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *chunks)
+
+
+def run_scan(
+    stages_or_body: Union[RoundStages, Callable],
+    state: RoundState,
+    num_rounds: int,
+    *,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume: Union[bool, int] = False,
+    runner: Optional[ScanRunner] = None,
+    jit: bool = False,
+) -> Tuple[RoundState, Any]:
+    """Scan-mode driver: run rounds ``state["round"]..num_rounds`` under
+    ``lax.scan``; returns ``(state, stacked outs)``.
+
+    ``jit=False`` (default) runs bare eager scans — bit-identical to the
+    legacy eager loops; ``jit=True`` compiles donated-buffer segments
+    (see :class:`ScanRunner` for the regime contract).
+
+    With ``ckpt_every == 0`` the whole run is ONE scan — the exact legacy
+    ``robust_gd``/``local_update_gd`` computation.  With ``ckpt_every >
+    0`` the run is split into boundary-aligned segments and a snapshot is
+    written after each; per-round numerics are unchanged (segmentation is
+    bit-invisible in both regimes), which is what makes kill-and-resume
+    bit-for-bit.
+    """
+    state, _host, r = _maybe_resume(state, ckpt_dir, resume)
+    runner = runner or ScanRunner(stages_or_body, jit=jit)
+    outs: List[Any] = []
+    while r < num_rounds:
+        if ckpt_every and ckpt_dir:
+            seg = min(ckpt_every - (r % ckpt_every), num_rounds - r)
+        else:
+            seg = num_rounds - r
+        state, out = runner(state, r, seg)
+        outs.append(out)
+        r += seg
+        if ckpt_every and ckpt_dir and r % ckpt_every == 0 and r < num_rounds:
+            save_snapshot(ckpt_dir, state)
+    if not outs:  # resumed at/after the end: nothing to run
+        return state, None
+    return state, _concat_outs(outs)
+
+
+# ---------------------------------------------------------------------------
+# Driver 2: scheduled per-round execution (attack mixtures, history)
+# ---------------------------------------------------------------------------
+
+
+def run_scheduled(
+    round_fn_for: Callable,
+    state: RoundState,
+    num_rounds: int,
+    *,
+    mixture=None,
+    record: Callable,
+    damage: Optional[Callable] = None,
+    init_entry: Optional[dict] = None,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume: Union[bool, int] = False,
+) -> Tuple[RoundState, List[dict]]:
+    """Host driver for per-round attack schedules; returns (state, history).
+
+    ``round_fn_for(attack) -> fn(state, r) -> (state, extras)`` supplies
+    the round executor for one attack configuration — a jitted engine
+    body for the reference loops (the caller caches per attack spec,
+    exactly the legacy jit-cache discipline) or an eager callable for the
+    federated streaming path.  ``record(r, attack, state, extras)``
+    builds the host history entry; ``damage(entry, prev_entry)`` is the
+    greedy scheduler's reward signal (the public drift every worker can
+    observe).  ``init_entry`` seeds ``prev_entry`` for round 0.
+
+    Checkpoint/resume: every ``ckpt_every`` rounds the
+    :data:`RoundState` snapshot is written together with the host state
+    — the full history so far and the scheduler's damage table — so a
+    resumed run continues the SAME adversary (greedy picks depend on
+    past damage) and returns the full-run history.
+    """
+    scheduler = mixture.make_scheduler() if mixture is not None else None
+    history: List[dict] = []
+    prev_entry = init_entry
+    state, host, r0 = _maybe_resume(state, ckpt_dir, resume)
+    if host:
+        history = list(host.get("history", []))
+        if history:
+            prev_entry = history[-1]
+        if scheduler is not None and host.get("scheduler") is not None:
+            scheduler.load_state_dict(host["scheduler"])
+    fn_cache: Dict[Any, Callable] = {}
+    for r in range(r0, num_rounds):
+        attack = mixture.for_round(r, scheduler) if mixture is not None else None
+        cache_key = _attack_cache_key(attack)
+        fn = fn_cache.get(cache_key)
+        if fn is None:
+            fn = fn_cache[cache_key] = round_fn_for(attack)
+        state, extras = fn(state, r)
+        entry = record(r, attack, state, extras)
+        if scheduler is not None and damage is not None:
+            scheduler.feedback(r, damage(entry, prev_entry))
+        prev_entry = entry
+        history.append(entry)
+        if ckpt_every and ckpt_dir and (r + 1) % ckpt_every == 0:
+            save_snapshot(ckpt_dir, state, host={
+                "history": history,
+                "scheduler": scheduler.state_dict() if scheduler else None,
+            })
+    return state, history
+
+
+def _attack_cache_key(attack):
+    """Hashable identity of one attack configuration — what the per-attack
+    jit caches key on (legacy round_fns keyed (name, alpha, strength))."""
+    if attack is None:
+        return None
+    from repro.rounds import comm
+
+    spec, alpha, strength = comm.resolve_attack(attack)
+    return (None if spec is None else spec.name, alpha, strength)

@@ -131,22 +131,27 @@ def _attack_deltas(deltas, prev_d, spec, alpha, strength, m: int, r):
         deltas, prev_d)
 
 
-def local_update_gd(
-    loss_fn: Callable,  # loss_fn(w, batch) -> scalar; batch leaves (n, ...)
-    w0,
-    worker_data,  # pytree with leaves (m, n, ...): worker-sharded dataset
+def make_local_update_stages(
+    loss_fn: Callable,
+    worker_data,
     cfg: LocalUpdateConfig,
     attack=None,  # AttackConfig | None (bare names/Attack specs rejected)
     trajectory_fn: Optional[Callable] = None,
+    emit: Optional[Callable] = None,
 ):
-    """Run robust local-update GD; returns (w_R, per-round metrics).
+    """One τ-local-step communication round as a rounds.engine stage
+    configuration (fixed attack).
 
-    Single-host reference (vmap over the worker axis), mirroring
-    ``robust_gd`` exactly at τ = 1.  ``trajectory_fn(w) -> scalar`` is
-    evaluated once per ROUND (e.g. ‖w − w*‖₂) and stacked into the
-    returned metrics, so curves are per-communication-round — the x-axis
-    the comm-efficiency benchmark converts to bytes.
+    The stages are the shared helpers above, composed in the exact
+    legacy order — local Δ accumulation, codec roundtrip, Byzantine row
+    replacement, robust aggregation, server step — so the engine run is
+    bit-for-bit the old ``round_step`` scan body (pinned by
+    tests/test_engine_equivalence.py).  ``emit`` overrides the per-round
+    scan output (default: ``trajectory_fn(w_new)``, matching
+    ``local_update_gd`` metrics).
     """
+    from repro.rounds import engine as round_engine
+
     if cfg.tau < 1:
         raise ValueError(f"tau must be >= 1, got {cfg.tau}")
     m = jax.tree.leaves(worker_data)[0].shape[0]
@@ -158,30 +163,68 @@ def local_update_gd(
     attacking = spec is not None and alpha > 0
     eta = cfg.step_size
 
-    def round_step(carry, r):
-        # prev_d — the previous round's broadcast aggregate — threads
-        # through the scan for ADAPTIVE attacks (ctx.prev_agg readers);
-        # per-round keys drive randomized ones; res is the per-worker
-        # error-feedback residual of the compression codec (() when the
-        # scheme carries none).  Identical structure to robust_gd's
-        # per-iteration carry otherwise.
-        w, prev_d, res = carry
-        deltas = _round_deltas(grads_shared, grads_local, w, worker_data,
-                               cfg.tau, eta)
-        deltas, res = _compress_deltas(deltas, res, cfg.compression, r)
-        if attacking:
-            deltas = _attack_deltas(deltas, prev_d, spec, alpha, strength, m, r)
-        d_agg = jax.tree.map(agg, deltas)
-        w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
-        w_new = _project(w_new, cfg.projection_radius)
-        metric = trajectory_fn(w_new) if trajectory_fn is not None else jnp.float32(0)
-        return (w_new, d_agg, res), metric
+    atk_fn = None
+    if attacking:
+        def atk_fn(deltas, prev_d, r):
+            return _attack_deltas(deltas, prev_d, spec, alpha, strength, m, r)
 
-    prev0 = jax.tree.map(jnp.zeros_like, w0)
-    res0 = _init_comp_state(cfg.compression, w0, m)
-    (w_final, _, _), metrics = jax.lax.scan(
-        round_step, (w0, prev0, res0), jnp.arange(cfg.num_rounds))
-    return w_final, metrics
+    def update(w, opt_state, d_agg, r):
+        w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
+        return _project(w_new, cfg.projection_radius), opt_state
+
+    if emit is None and trajectory_fn is not None:
+        emit = lambda w_new, d_agg: trajectory_fn(w_new)
+
+    return round_engine.RoundStages(
+        local_work=lambda w, r: _round_deltas(
+            grads_shared, grads_local, w, worker_data, cfg.tau, eta),
+        compress=lambda deltas, res, r: _compress_deltas(
+            deltas, res, cfg.compression, r),
+        attack=atk_fn,
+        aggregate=lambda deltas: jax.tree.map(agg, deltas),
+        update=update,
+        emit=emit,
+    )
+
+
+def local_update_gd(
+    loss_fn: Callable,  # loss_fn(w, batch) -> scalar; batch leaves (n, ...)
+    w0,
+    worker_data,  # pytree with leaves (m, n, ...): worker-sharded dataset
+    cfg: LocalUpdateConfig,
+    attack=None,  # AttackConfig | None (bare names/Attack specs rejected)
+    trajectory_fn: Optional[Callable] = None,
+    *,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume=False,
+):
+    """Run robust local-update GD; returns (w_R, per-round metrics).
+
+    Single-host reference (vmap over the worker axis), mirroring
+    ``robust_gd`` exactly at τ = 1.  ``trajectory_fn(w) -> scalar`` is
+    evaluated once per ROUND (e.g. ‖w − w*‖₂) and stacked into the
+    returned metrics, so curves are per-communication-round — the x-axis
+    the comm-efficiency benchmark converts to bytes.
+
+    A thin stage configuration over the unified round engine: the
+    previous broadcast aggregate (adaptive attacks) and the per-worker
+    error-feedback residual (codec state) ride the engine's RoundState
+    carry.  With ``ckpt_every``/``ckpt_dir`` a snapshot is written every
+    ``ckpt_every`` rounds; ``resume=True`` (or a round index) continues
+    bit-for-bit.
+    """
+    from repro.rounds import engine as round_engine
+
+    m = jax.tree.leaves(worker_data)[0].shape[0]
+    stages = make_local_update_stages(loss_fn, worker_data, cfg, attack,
+                                      trajectory_fn)
+    state = round_engine.make_state(
+        w0, comp_res=_init_comp_state(cfg.compression, w0, m))
+    state, metrics = round_engine.run_scan(
+        stages, state, cfg.num_rounds,
+        ckpt_every=ckpt_every, ckpt_dir=ckpt_dir, resume=resume)
+    return state["w"], metrics
 
 
 def run_local_update_rounds(
@@ -191,6 +234,10 @@ def run_local_update_rounds(
     cfg: LocalUpdateConfig,
     mixture=None,  # fed.rounds.AttackMixture (None = clean)
     trajectory_fn: Optional[Callable] = None,
+    *,
+    ckpt_every: int = 0,
+    ckpt_dir: Optional[str] = None,
+    resume=False,
 ):
     """Round loop with a per-round attack SCHEDULE; returns (w, history).
 
@@ -203,65 +250,54 @@ def run_local_update_rounds(
     "metric"} with ``metric = trajectory_fn(w_r)`` (0 when None); the
     greedy scheduler's damage signal is the metric drift (or the
     aggregate-norm drift when no trajectory_fn is given).
+
+    Runs on rounds.engine's scheduled driver: one jitted engine body per
+    DISTINCT attack spec (the scan version can't switch payload formulas
+    across rounds; re-tracing per round would pay cfg.num_rounds
+    compilations), with the error-feedback residual persisting ACROSS
+    the per-attack jit cache on the engine carry — the codec state
+    belongs to the workers, not to the round's attack.  The metric and
+    delta-norm are computed on the HOST each round (legacy discipline):
+    the greedy damage signal feeds back into future picks, so it is part
+    of the trajectory, and snapshots carry the scheduler table with the
+    device state (``ckpt_every``/``ckpt_dir``/``resume``).
     """
-    scheduler = mixture.make_scheduler() if mixture is not None else None
+    from repro.rounds import engine as round_engine
+
     m = jax.tree.leaves(worker_data)[0].shape[0]
-    grad_fn = jax.grad(loss_fn)
-    grads_shared = jax.vmap(grad_fn, in_axes=(None, 0))
-    grads_local = jax.vmap(grad_fn, in_axes=(0, 0))
-    agg = aggregators.get_aggregator(cfg.method, cfg.beta)
-    eta = cfg.step_size
-    # one jitted round body per DISTINCT attack spec (the scan version
-    # can't switch payload formulas across rounds; re-tracing per round
-    # would pay cfg.num_rounds compilations) — same round body as
-    # local_update_gd (shared helpers), incl. the no-Byzantine-fraction
-    # ValueError from resolve_attack_checked
-    round_fns: dict = {}
 
-    def get_round_fn(attack):
-        spec, alpha, strength = comm.resolve_attack_checked(attack)
-        key = (None if spec is None else spec.name, alpha, strength)
-        if key not in round_fns:
-            @jax.jit
-            def round_fn(w, prev_d, res, r):
-                deltas = _round_deltas(grads_shared, grads_local, w,
-                                       worker_data, cfg.tau, eta)
-                deltas, res = _compress_deltas(deltas, res, cfg.compression, r)
-                if spec is not None and alpha > 0:
-                    deltas = _attack_deltas(deltas, prev_d, spec, alpha,
-                                            strength, m, r)
-                d_agg = jax.tree.map(agg, deltas)
-                w_new = jax.tree.map(lambda p, dd: p - eta * dd, w, d_agg)
-                return _project(w_new, cfg.projection_radius), d_agg, res
+    def round_fn_for(attack):
+        # resolve_attack_checked (inside the stage builder) still raises
+        # for bare names/Attack specs before any jit cache entry exists
+        stages = make_local_update_stages(
+            loss_fn, worker_data, cfg, attack,
+            emit=lambda w_new, d_agg: d_agg)
+        body = jax.jit(round_engine.make_round_body(stages))
+        return lambda state, r: body(state, jnp.int32(r))
 
-            round_fns[key] = round_fn
-        return round_fns[key]
-
-    w = w0
-    history = []
-    prev_metric = float(trajectory_fn(w)) if trajectory_fn is not None else 0.0
-    prev_d = jax.tree.map(jnp.zeros_like, w0)
-    # error-feedback residual persists ACROSS the per-attack jit cache:
-    # the codec state belongs to the workers, not to the round's attack
-    comp_res = _init_comp_state(cfg.compression, w0, m)
-    for r in range(cfg.num_rounds):
-        attack = mixture.for_round(r, scheduler) if mixture is not None else None
-        w, d_agg, comp_res = get_round_fn(attack)(w, prev_d, comp_res,
-                                                  jnp.int32(r))
-        metric = float(trajectory_fn(w)) if trajectory_fn is not None else 0.0
+    def record(r, attack, state, d_agg):
+        metric = (float(trajectory_fn(state["w"]))
+                  if trajectory_fn is not None else 0.0)
         d_norm = float(jnp.linalg.norm(
             jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(d_agg)])))
-        if scheduler is not None:
-            # adversary reward: observable drift the broadcast state reveals
-            damage = (metric - prev_metric) if trajectory_fn is not None else d_norm
-            scheduler.feedback(r, damage)
-        prev_metric = metric
-        prev_d = d_agg
-        history.append({
+        return {
             "round": r,
             "attack": attack.name if attack is not None else "none",
             "tau": cfg.tau,
             "delta_norm": d_norm,
             "metric": metric,
-        })
-    return w, history
+        }
+
+    def damage(entry, prev):
+        # adversary reward: observable drift the broadcast state reveals
+        return ((entry["metric"] - prev["metric"])
+                if trajectory_fn is not None else entry["delta_norm"])
+
+    init_metric = float(trajectory_fn(w0)) if trajectory_fn is not None else 0.0
+    state = round_engine.make_state(
+        w0, comp_res=_init_comp_state(cfg.compression, w0, m))
+    state, history = round_engine.run_scheduled(
+        round_fn_for, state, cfg.num_rounds, mixture=mixture, record=record,
+        damage=damage, init_entry={"metric": init_metric},
+        ckpt_every=ckpt_every, ckpt_dir=ckpt_dir, resume=resume)
+    return state["w"], history

@@ -1,0 +1,158 @@
+"""Round-trip exactness of checkpoint/checkpoint.py.
+
+The rounds.engine resume contract (tests/test_engine_equivalence.py) is
+only as strong as the serializer under it: a PRNG key restored with a
+different impl, or a bf16 leaf silently widened to f32, would make a
+resumed run diverge from the uninterrupted one while every "close
+enough" comparison still passes.  These are the regression pins for the
+two round-trip gaps the engine work closed:
+
+- typed JAX PRNG key arrays (``jax.random.key``) save as their uint32
+  ``key_data`` with the impl recorded, and restore to the EXACT original
+  dtype/impl through ``wrap_key_data``;
+- non-native dtypes (bfloat16 — npz cannot store ml_dtypes) widen to f32
+  on disk and restore to the RECORDED dtype, not the template's.
+
+Basic pytree round-trips live in tests/test_substrate.py TestCheckpoint;
+this file covers the dtype/impl edge cases plus the ``extra`` metadata
+channel the engine snapshots use for host state.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_extra, restore, save
+
+
+class TestTypedPRNGKeys:
+    def test_typed_key_roundtrip_exact(self, tmp_path):
+        key = jax.random.key(42)
+        assert jax.dtypes.issubdtype(key.dtype, jax.dtypes.prng_key)
+        save(str(tmp_path), {"key": key})
+        restored, _ = restore(str(tmp_path), {"key": jax.random.key(0)})
+        k = restored["key"]
+        assert k.dtype == key.dtype
+        assert str(jax.random.key_impl(k)) == str(jax.random.key_impl(key))
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(k)),
+            np.asarray(jax.random.key_data(key)))
+        # the restored key must DRAW identically, not just compare equal
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.normal(k, (8,))),
+            np.asarray(jax.random.normal(key, (8,))))
+
+    def test_batched_key_array_roundtrip(self, tmp_path):
+        keys = jax.random.split(jax.random.key(7), 5)
+        save(str(tmp_path), {"keys": keys})
+        restored, _ = restore(
+            str(tmp_path), {"keys": jax.random.split(jax.random.key(0), 5)})
+        assert restored["keys"].shape == (5,)
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(restored["keys"])),
+            np.asarray(jax.random.key_data(keys)))
+
+    def test_nonstandard_impl_recorded(self, tmp_path):
+        key = jax.random.key(3, impl="rbg")
+        save(str(tmp_path), {"key": key})
+        # template carries the DEFAULT impl; the recorded impl must win
+        restored, _ = restore(str(tmp_path), {"key": jax.random.key(0)})
+        assert str(jax.random.key_impl(restored["key"])) == "rbg"
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(restored["key"])),
+            np.asarray(jax.random.key_data(key)))
+
+    def test_key_shape_mismatch_raises(self, tmp_path):
+        save(str(tmp_path), {"k": jax.random.split(jax.random.key(0), 3)})
+        with pytest.raises(ValueError, match="key-shape"):
+            restore(str(tmp_path), {"k": jax.random.split(jax.random.key(0), 4)})
+
+    def test_legacy_uint32_keys_unaffected(self, tmp_path):
+        # PRNGKey (raw uint32 pair) is a plain array — no key handling
+        key = jax.random.PRNGKey(5)
+        save(str(tmp_path), {"key": key})
+        restored, _ = restore(str(tmp_path), {"key": jax.random.PRNGKey(0)})
+        assert restored["key"].dtype == jnp.uint32
+        np.testing.assert_array_equal(np.asarray(restored["key"]),
+                                      np.asarray(key))
+
+
+class TestNonNativeDtypes:
+    def test_bf16_restores_to_bf16(self, tmp_path):
+        x = jnp.asarray(np.linspace(-3, 3, 16), jnp.bfloat16)
+        save(str(tmp_path), {"x": x})
+        restored, _ = restore(str(tmp_path), {"x": jnp.zeros((16,), jnp.bfloat16)})
+        assert restored["x"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(restored["x"], np.float32), np.asarray(x, np.float32))
+
+    def test_bf16_wins_over_f32_template(self, tmp_path):
+        # the recorded dtype, not the template's, decides: a carelessly-
+        # f32 template must not silently widen a bf16 checkpoint
+        x = jnp.asarray([1.5, -2.25, 1e4], jnp.bfloat16)
+        save(str(tmp_path), {"x": x})
+        restored, _ = restore(str(tmp_path), {"x": jnp.zeros((3,), jnp.float32)})
+        assert restored["x"].dtype == jnp.bfloat16
+
+    def test_widening_is_lossless_for_bf16(self, tmp_path):
+        # every bf16 value is exactly representable in f32: the on-disk
+        # widening must be bit-transparent through the round trip
+        raw = np.arange(256, dtype=np.uint16).view(jnp.bfloat16.dtype)
+        x = jnp.asarray(raw[np.isfinite(raw.astype(np.float32))])
+        save(str(tmp_path), {"x": x})
+        restored, _ = restore(str(tmp_path), {"x": jnp.zeros_like(x)})
+        assert (np.asarray(restored["x"]).tobytes()
+                == np.asarray(x).tobytes())
+
+    def test_mixed_tree_roundtrip(self, tmp_path):
+        tree = {
+            "w": jnp.asarray([1.0, 2.0], jnp.float32),
+            "h": jnp.asarray([0.5, 0.25], jnp.bfloat16),
+            "n": jnp.asarray([3], jnp.int32),
+            "key": jax.random.key(9),
+        }
+        save(str(tmp_path), tree, step=4)
+        like = {
+            "w": jnp.zeros((2,), jnp.float32),
+            "h": jnp.zeros((2,), jnp.bfloat16),
+            "n": jnp.zeros((1,), jnp.int32),
+            "key": jax.random.key(0),
+        }
+        restored, step = restore(str(tmp_path), like)
+        assert step == 4
+        for k in ("w", "h", "n"):
+            assert restored[k].dtype == tree[k].dtype, k
+            np.testing.assert_array_equal(
+                np.asarray(restored[k], np.float32),
+                np.asarray(tree[k], np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(restored["key"])),
+            np.asarray(jax.random.key_data(tree["key"])))
+
+
+class TestRestoredLeafType:
+    def test_restored_leaves_are_jax_arrays(self, tmp_path):
+        # resumed engine states feed .at[] scatter updates and jit bodies:
+        # numpy leaves would crash the first error-feedback round
+        save(str(tmp_path), {"res": jnp.zeros((4, 3))})
+        restored, _ = restore(str(tmp_path), {"res": jnp.zeros((4, 3))})
+        assert isinstance(restored["res"], jax.Array)
+        restored["res"].at[0].set(1.0)  # the op resume relies on
+
+
+class TestExtraMetadata:
+    def test_extra_roundtrip_exact_floats(self, tmp_path):
+        # host-side engine state (history, greedy damage tables) rides the
+        # extra channel; -inf and full float reprs must survive JSON
+        extra = {"host": {
+            "history": [{"round": 0, "err": 0.123456789012345}],
+            "scheduler": {"damage": [float("-inf"), 1.5e-8], "picked": {"0": 2}},
+        }}
+        save(str(tmp_path), {"w": jnp.zeros((2,))}, step=1, extra=extra)
+        assert load_extra(str(tmp_path)) == extra
+
+    def test_missing_leaf_raises(self, tmp_path):
+        save(str(tmp_path), {"a": jnp.zeros((2,))})
+        with pytest.raises(KeyError, match="missing leaf"):
+            restore(str(tmp_path), {"a": jnp.zeros((2,)), "b": jnp.zeros((2,))})

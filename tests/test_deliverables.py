@@ -54,7 +54,9 @@ def test_docs_exist_and_reference_sections():
         "DESIGN.md": ["Arch-applicability", "Pallas kernel", "robust reduce-scatter",
                       "Communication rounds", "Asynchronous rounds",
                       "Training harness", "device_steps", "§Compression",
-                      "Error feedback", "post-decode"],
+                      "Error feedback", "post-decode",
+                      "§Round engine", "RoundState", "Resume determinism",
+                      "bit-for-bit"],
         "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis",
                            "§Communication", "§Asynchronous",
                            "§Training throughput", "BENCH_train.json",
@@ -62,7 +64,9 @@ def test_docs_exist_and_reference_sections():
         "README.md": ["bucketed", "fsdp", "Communication efficiency",
                       "one_round_rate", "async-buffer", "effective-m",
                       "repro.launch.train", "--device-steps",
-                      "--compression", "Payload compression"],
+                      "--compression", "Payload compression",
+                      "--ckpt-dir", "--resume", "checkpoint/resume",
+                      "final iterate sha256"],
     }.items():
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), name

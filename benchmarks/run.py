@@ -38,6 +38,14 @@ count before jax initializes) and gates on its structural HLO checks;
 the wall-clock <10%-overhead gate is checked separately by
 ``--gate-train [PATH]`` against the committed BENCH_train.json — a
 deterministic re-check of recorded numbers, immune to runner noise.
+
+``--json-serve [PATH]`` writes the serve-throughput grid (slots ×
+adaptation cadence: tokens/sec, tick latency, rounds, no-recompile
+counts — see benchmarks/serve_throughput.py) to PATH (default
+BENCH_serve.json).  Like train, the serve suite runs in a SUBPROCESS
+and gates on its structural no-recompile check; the wall-clock
+<15%-overhead gate is checked by ``--gate-serve [PATH]`` against the
+committed BENCH_serve.json.
 """
 from __future__ import annotations
 
@@ -50,7 +58,7 @@ import tempfile
 import traceback
 
 SUITES = ["table2", "table3", "table4", "fig1", "rates", "matrix", "agg",
-          "comm", "async", "train"]
+          "comm", "async", "train", "serve"]
 
 GATE_M = 32  # the gated worker count (the ROADMAP's deployment size)
 # Timing gate with a safety margin: on shared CI runners wall time is
@@ -77,14 +85,15 @@ def _gate_agg(records) -> list:
     return problems
 
 
-def _run_train_subprocess(smoke: bool) -> dict:
-    """Run the train-throughput grid in a fresh interpreter: it must set
-    --xla_force_host_platform_device_count BEFORE jax initializes, which
-    this process may already have done for another suite."""
+def _run_bench_subprocess(module: str, smoke: bool) -> dict:
+    """Run a throughput grid in a fresh interpreter: it must set
+    --xla_force_host_platform_device_count BEFORE jax initializes (which
+    this process may already have done for another suite), and a cold
+    jit cache keeps the timing honest."""
     with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
         path = tmp.name
     try:
-        cmd = [sys.executable, "-m", "benchmarks.train_throughput",
+        cmd = [sys.executable, "-m", module,
                "--json", path] + (["--smoke"] if smoke else [])
         proc = subprocess.run(cmd, text=True)
         with open(path) as f:
@@ -121,6 +130,16 @@ def main() -> None:
                          "shows <10%% robust-aggregation step-time overhead "
                          "at its largest config (deterministic re-check of "
                          "recorded numbers)")
+    ap.add_argument("--json-serve", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="write the serve-throughput grid to PATH "
+                         "(default BENCH_serve.json)")
+    ap.add_argument("--gate-serve", nargs="?", const="BENCH_serve.json",
+                    default=None, metavar="PATH",
+                    help="fail unless the committed BENCH_serve.json at PATH "
+                         "shows <15%% robust-cadence tokens/s overhead vs "
+                         "serve-only at its largest slot count "
+                         "(deterministic re-check of recorded numbers)")
     ap.add_argument("--smoke", action="store_true",
                     help="shrunken agg sweep for CI wall-clock budgets")
     ap.add_argument("--gate-agg", action="store_true",
@@ -135,6 +154,7 @@ def main() -> None:
     comm_payload = None
     async_payload = None
     train_payload = None
+    serve_payload = None
     for suite in only:
         try:
             if suite == "table2":
@@ -155,7 +175,7 @@ def main() -> None:
                 from benchmarks import comm_efficiency as mod
             elif suite == "async":
                 from benchmarks import async_throughput as mod
-            elif suite == "train":
+            elif suite in ("train", "serve"):
                 mod = None  # runs in a subprocess below
             else:
                 raise ValueError(f"unknown suite {suite}")
@@ -184,7 +204,8 @@ def main() -> None:
                         f"{len(async_payload['violations'])} theory violations, "
                         f"{len(async_payload['failed_gates'])} speedup failures")
             elif suite == "train":
-                train_payload = _run_train_subprocess(args.smoke)
+                train_payload = _run_bench_subprocess(
+                    "benchmarks.train_throughput", args.smoke)
                 if (train_payload["violations"]
                         or train_payload["failed_gates"]
                         or train_payload["subprocess_returncode"] != 0):
@@ -194,6 +215,18 @@ def main() -> None:
                         f"violations, {len(train_payload['failed_gates'])} "
                         f"overhead failures (subprocess rc "
                         f"{train_payload['subprocess_returncode']})")
+            elif suite == "serve":
+                serve_payload = _run_bench_subprocess(
+                    "benchmarks.serve_throughput", args.smoke)
+                if (serve_payload["violations"]
+                        or serve_payload["failed_gates"]
+                        or serve_payload["subprocess_returncode"] != 0):
+                    raise AssertionError(
+                        f"serve-throughput gates failed: "
+                        f"{len(serve_payload['violations'])} no-recompile "
+                        f"violations, {len(serve_payload['failed_gates'])} "
+                        f"overhead failures (subprocess rc "
+                        f"{serve_payload['subprocess_returncode']})")
             else:
                 mod.run(verbose=True)
         except Exception:  # noqa: BLE001
@@ -229,6 +262,13 @@ def main() -> None:
         print(f"wrote {args.json_train} "
               f"({len(train_payload['records'])} records)", file=sys.stderr)
 
+    if args.json_serve is not None and serve_payload is not None:
+        serve_payload = {**serve_payload, "smoke": args.smoke}
+        with open(args.json_serve, "w") as f:
+            json.dump(serve_payload, f, indent=1)
+        print(f"wrote {args.json_serve} "
+              f"({len(serve_payload['records'])} records)", file=sys.stderr)
+
     if args.gate_agg:
         problems = _gate_agg(agg_records or [])
         for p in problems:
@@ -251,6 +291,23 @@ def main() -> None:
         else:
             print(f"GATE train: FAILED {g}", file=sys.stderr)
             failed.append("train-gate")
+
+    if args.gate_serve is not None:
+        from benchmarks.serve_throughput import gate_from_records as serve_gate
+        try:
+            with open(args.gate_serve) as f:
+                committed = json.load(f)
+            g = serve_gate(committed.get("records", []))
+        except FileNotFoundError:
+            g = {"ok": False, "reason": f"{args.gate_serve} not found"}
+        if g.get("ok"):
+            print(f"GATE serve: worst robust-cadence overhead "
+                  f"{g.get('worst_overhead', 0)*100:.1f}% at "
+                  f"{g.get('slots')} slots "
+                  f"(< {g.get('threshold', 0)*100:.0f}%)", file=sys.stderr)
+        else:
+            print(f"GATE serve: FAILED {g}", file=sys.stderr)
+            failed.append("serve-gate")
 
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)

@@ -22,7 +22,11 @@ Handles both artifact schemas, keyed off the payload's ``suite`` field:
 - ``train`` (BENCH_train.json) — (config, strategy, attack) cells: step
   time and tokens/sec of the device-steps trainer (wall-clock timing,
   noisy on shared runners — the hard <10%-overhead gate re-checks the
-  committed numbers deterministically via ``run.py --gate-train``).
+  committed numbers deterministically via ``run.py --gate-train``);
+- ``serve`` (BENCH_serve.json) — (slots, adapt_every) cells: tokens/sec
+  and tick latency of the continuous-batching serve engine with robust
+  continual adaptation on cadence (also wall-clock — the <15%-overhead
+  gate re-checks the committed numbers via ``run.py --gate-serve``).
 
 A MISSING ``--base`` file is not an error: when a brand-new suite lands,
 its first committed baseline doesn't exist yet on the base branch — the
@@ -160,6 +164,37 @@ def _diff_train(base: dict, new: dict) -> None:
     _dropped(base, new)
 
 
+def _diff_serve(base: dict, new: dict) -> None:
+    def index(payload):
+        return {(r["slots"], r["adapt_every"]): r
+                for r in payload.get("records", [])
+                if r.get("status") == "ok"}
+
+    base, new = index(base), index(new)
+    print("### Serve-throughput grid vs committed baseline")
+    print()
+    print("| slots | adapt_every | base tok/s | new tok/s | tok/s Δ | "
+          "base p99 | new p99 | rounds |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(new):
+        slots, cadence = key
+        nr = new[key]
+        br = base.get(key)
+        if br is None:
+            print(f"| {slots} | {cadence} | — | "
+                  f"{_fmt(nr.get('tok_per_s'), ',.0f')} | new case | — | "
+                  f"{_fmt(nr.get('p99_latency_ticks'), '.1f')} | "
+                  f"{nr.get('rounds', 0)} |")
+            continue
+        dtps = nr["tok_per_s"] - br["tok_per_s"]
+        print(f"| {slots} | {cadence} | {br['tok_per_s']:,.0f} | "
+              f"{nr['tok_per_s']:,.0f} | {dtps:+,.0f} | "
+              f"{_fmt(br.get('p99_latency_ticks'), '.1f')} | "
+              f"{_fmt(nr.get('p99_latency_ticks'), '.1f')} | "
+              f"{nr.get('rounds', 0)} |")
+    _dropped(base, new)
+
+
 def _dropped(base: dict, new: dict) -> None:
     dropped = sorted(set(base) - set(new))
     if dropped:
@@ -195,6 +230,8 @@ def main(argv=None) -> int:
         _diff_async(base, new)
     elif suite == "train":
         _diff_train(base, new)
+    elif suite == "serve":
+        _diff_serve(base, new)
     else:
         _diff_agg(base, new)
     return 0

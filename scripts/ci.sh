@@ -31,15 +31,30 @@
 #                             full grid is regenerated offline with
 #                             python -m benchmarks.train_throughput
 #                             --json BENCH_train.json — don't clobber it
-#                             with the smoke artifact)
+#                             with the smoke artifact), or if the
+#                             COMMITTED BENCH_serve.json stops showing
+#                             <15% robust-cadence tokens/s overhead vs
+#                             serve-only at the largest slot count
+#                             (run.py --gate-serve; regenerated offline
+#                             with python -m benchmarks.serve_throughput
+#                             --json BENCH_serve.json), or if any serve
+#                             cell recompiled mid-stream
+#   scripts/ci.sh serve       serving smoke: continuous-batching engine +
+#                             robust continual adaptation end-to-end
+#                             twice on the debug mesh, FAILS unless both
+#                             runs print the same "final iterate sha256"
+#                             line (seeded traffic, poisoned feedback,
+#                             robust rounds, hot-swaps — all
+#                             bit-deterministic)
 #   scripts/ci.sh docs        registry-generated README tables
 #                             (python -m repro.docs --check): FAILS if the
 #                             attack/aggregator/strategy/compression/policy
 #                             tables drifted from the registries
 #                             (regenerate: python -m repro.docs)
 #   scripts/ci.sh robustness  attack x aggregator x alpha scenario matrix
-#                             plus the compressed-payload codec cells and
-#                             the buffered-async stale-exploit cells
+#                             plus the compressed-payload codec cells,
+#                             the buffered-async stale-exploit cells and
+#                             the poisoned-feedback serving cells
 #                             (repro.attacks.matrix --smoke): writes
 #                             ROBUSTNESS.smoke.json (the committed
 #                             ROBUSTNESS.json is the full grid — don't
@@ -82,8 +97,14 @@ if [ "${1:-}" = "bench" ]; then
     # train: the smoke grid re-verifies the HLO structure gates on this
     # host; the <10% overhead gate is a deterministic re-check of the
     # COMMITTED full-grid numbers (immune to runner wall-clock noise)
-    exec python -m benchmarks.run --only train --smoke \
-        --json-train BENCH_train.smoke.json --gate-train BENCH_train.json
+    python -m benchmarks.run --only train --smoke \
+        --json-train BENCH_train.smoke.json --gate-train BENCH_train.json || exit 1
+    # serve: same split — the smoke grid re-verifies the no-recompile
+    # contract live; the <15% robust-cadence overhead gate re-checks the
+    # COMMITTED BENCH_serve.json (regenerated offline with
+    # python -m benchmarks.serve_throughput --json BENCH_serve.json)
+    exec python -m benchmarks.run --only serve --smoke \
+        --json-serve BENCH_serve.smoke.json --gate-serve BENCH_serve.json
 fi
 if [ "${1:-}" = "docs" ]; then
     exec python -m repro.docs --check
@@ -109,6 +130,26 @@ if [ "${1:-}" = "resume" ]; then
         exit 1
     fi
     echo "resume smoke OK (bit-for-bit)"
+    exit 0
+fi
+if [ "${1:-}" = "serve" ]; then
+    # serving smoke: run the continuous-batching engine + robust
+    # continual adaptation end-to-end TWICE on the debug mesh and FAIL
+    # unless both print the same "final iterate sha256" line — the
+    # traffic, feedback corruption, robust rounds, and hot-swaps are all
+    # seeded, so the served iterate is bit-deterministic
+    common="--smoke --arch llama3_2_3b --requests 24 --slots 3 --shards 2
+            --num-users 1000 --alpha 0.5 --attack feedback_flip
+            --adapt-every 8 --batch-per-shard 2 --method median"
+    one=$(python -m repro.serve.run $common | grep 'final iterate sha256') || exit 1
+    two=$(python -m repro.serve.run $common | grep 'final iterate sha256') || exit 1
+    echo "run 1: $one"
+    echo "run 2: $two"
+    if [ "$one" != "$two" ]; then
+        echo "serve smoke FAILED: final iterate digests differ" >&2
+        exit 1
+    fi
+    echo "serve smoke OK (bit-deterministic)"
     exit 0
 fi
 if [ "${1:-}" = "lint" ]; then

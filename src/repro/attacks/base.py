@@ -8,6 +8,10 @@ can still fall to a stronger one (Chen et al. 2017; Baruch et al. 2019;
 Xie et al. 2020).  The engine therefore makes the *gradient-access
 level* a first-class, declared property of every attack:
 
+``feedback``    corrupts the Byzantine *user's* feedback scores in the
+                serving traffic stream (repro.serve) before any gradient
+                is formed — the data-stream analogue of ``data``.  No
+                gradient-space payload.
 ``data``        corrupts the Byzantine worker's local samples before the
                 gradient is ever computed (the paper's label-flip
                 experiments).  No gradient-space payload.
@@ -33,11 +37,15 @@ from typing import Callable, Optional
 import jax
 
 # Access levels, ordered by increasing knowledge of the honest gradients.
+# FEEDBACK sits below DATA: a poisoned-feedback user sees only its own
+# served response and the score channel, never the local samples a
+# Byzantine *worker* could rewrite.
+FEEDBACK = "feedback"
 DATA = "data"
 LOCAL = "local"
 STATS = "stats"
 OMNISCIENT = "omniscient"
-ACCESS_LEVELS = (DATA, LOCAL, STATS, OMNISCIENT)
+ACCESS_LEVELS = (FEEDBACK, DATA, LOCAL, STATS, OMNISCIENT)
 
 # Arrival-timing behaviours an attack may declare for buffered async
 # rounds (fed/async_rounds.py).  Timing is a *scheduling* capability,
@@ -130,6 +138,10 @@ class Attack:
     summary: str = ""
     # data-space attacks: (labels, key, num_classes) -> corrupted labels
     corrupt_labels: Optional[Callable] = None
+    # feedback-stream attacks: (scores, key, strength) -> corrupted scores
+    # in [-1, 1]; traceable jnp ops only (runs under vmap/jit in the
+    # serving adapter and the scenario matrix)
+    corrupt_feedback: Optional[Callable] = None
 
     def __post_init__(self):
         access_rank(self.access)  # validate
@@ -137,7 +149,11 @@ class Attack:
             raise ValueError(
                 f"attack {self.name!r}: unknown arrival behaviour "
                 f"{self.arrival!r}; want one of {ARRIVAL_BEHAVIOURS} or None")
-        if self.access == DATA:
+        if self.access == FEEDBACK:
+            if self.corrupt_feedback is None:
+                raise ValueError(
+                    f"feedback attack {self.name!r} needs corrupt_feedback")
+        elif self.access == DATA:
             if self.corrupt_labels is None:
                 raise ValueError(f"data attack {self.name!r} needs corrupt_labels")
         elif self.payload is None:

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.attacks.base import (
     DATA,
+    FEEDBACK,
     LOCAL,
     OMNISCIENT,
     STATS,
@@ -145,11 +146,12 @@ def apply_to_rows(
 ) -> jax.Array:
     """Replace Byzantine rows of ``stacked`` ``(m, ...)`` per ``mask``.
 
-    Data attacks return ``stacked`` unchanged (they corrupt samples
-    upstream of the gradient computation — data/pipeline.py).
+    Data and feedback attacks return ``stacked`` unchanged (they corrupt
+    samples / feedback scores upstream of the gradient computation —
+    data/pipeline.py and serve/traffic.py respectively).
     """
     attack = as_attack(attack)
-    if attack.access == DATA:
+    if attack.access in (DATA, FEEDBACK):
         return stacked
     m = stacked.shape[0]
     if alpha is None:
@@ -196,8 +198,9 @@ def payload_from_stats(
             "cannot run on the statistics-only (chunked/streaming) path; use the "
             "gather or bucketed strategy"
         )
-    if attack.access == DATA:
-        raise ValueError(f"data attack {attack.name!r} has no gradient payload")
+    if attack.access in (DATA, FEEDBACK):
+        raise ValueError(
+            f"{attack.access} attack {attack.name!r} has no gradient payload")
     if own is None and attack.reads_own:
         raise ValueError(
             f"attack {attack.name!r} reads the worker's own gradient row; the "
@@ -223,3 +226,24 @@ def corrupt_labels(
     if key is None:
         key = jax.random.PRNGKey(0)
     return attack.corrupt_labels(y, key, num_classes)
+
+
+def corrupt_feedback(
+    attack: AttackLike,
+    scores: jax.Array,
+    key: Optional[jax.Array] = None,
+    strength=None,
+) -> jax.Array:
+    """Run a feedback attack's score corruption (identity otherwise).
+
+    ``scores`` are per-sequence feedback values in [-1, 1]; the corrupted
+    output stays in that range (the serving stack clips regardless).
+    """
+    attack = as_attack(attack)
+    if attack.access != FEEDBACK:
+        return scores
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if strength is None:
+        strength = attack.strength
+    return jnp.clip(attack.corrupt_feedback(scores, key, strength), -1.0, 1.0)

@@ -20,7 +20,15 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import ndtri
 
-from repro.attacks.base import DATA, LOCAL, OMNISCIENT, STATS, Attack, AttackContext
+from repro.attacks.base import (
+    DATA,
+    FEEDBACK,
+    LOCAL,
+    OMNISCIENT,
+    STATS,
+    Attack,
+    AttackContext,
+)
 from repro.attacks.registry import alias, register
 
 _VAR_EPS = 1e-12  # legacy epsilon under the sqrt (core/attacks.py)
@@ -141,6 +149,27 @@ def _stale(ctx: AttackContext) -> jax.Array:
     )
 
 
+# ----------------------------------------------------------------- feedback
+
+
+def _feedback_flip(scores: jax.Array, key: jax.Array, strength) -> jax.Array:
+    # Poisoned-feedback sign flip: praise what the model got wrong, pan
+    # what it got right.  strength interpolates honest -> flipped
+    # (1.0 = full flip); the serving stack clips to [-1, 1] regardless.
+    del key
+    return scores - 2.0 * jnp.minimum(strength, 1.0) * scores
+
+
+def _feedback_alie(scores: jax.Array, key: jax.Array, strength) -> jax.Array:
+    # ALIE in score space: every Byzantine user reports the same value,
+    # mean - s*std of its own honest scores — far enough to bias the
+    # feedback-weighted gradient, close enough to hide inside the spread.
+    del key
+    mu = jnp.mean(scores)
+    sd = jnp.sqrt(jnp.maximum(jnp.var(scores), _VAR_EPS))
+    return jnp.broadcast_to(mu - strength * sd, scores.shape)
+
+
 # --------------------------------------------------------------------- data
 
 
@@ -191,3 +220,8 @@ register(Attack("label_flip", DATA, corrupt_labels=_flip_labels,
                 summary="y -> (C-1) - y on Byzantine shards"))
 register(Attack("random_label", DATA, corrupt_labels=_random_labels,
                 randomized=True, summary="iid uniform labels on Byzantine shards"))
+register(Attack("feedback_flip", FEEDBACK, corrupt_feedback=_feedback_flip,
+                summary="score -> -score on Byzantine users' feedback"))
+register(Attack("feedback_alie", FEEDBACK, corrupt_feedback=_feedback_alie,
+                strength=1.5,
+                summary="mean - s*std of own scores (ALIE in score space)"))

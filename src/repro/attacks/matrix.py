@@ -29,6 +29,18 @@ against the codec-scaled bounds (``theory.delta_median_compressed`` /
 (``evaluate_async``) covers the staleness engine.  Both land in the
 same JSON artifact under ``compressed`` / ``async``.
 
+A **feedback** grid (``evaluate_feedback``) covers the serving stack's
+poisoned-feedback threat model: per-sample scores weight the regression
+targets (the feedback-weighted optimum is ``E[s] * w*``), Byzantine
+shards push their score vectors through ``engine.corrupt_feedback``
+(feedback_flip / feedback_alie) and then compute gradients HONESTLY
+from the poisoned scores — the FEEDBACK access contract, corruption
+strictly upstream of the wire.  median/trimmed_mean are gated below
+their breakdown points against the eq. (3)/(5) rates at the
+score-weighted noise scale; the plain mean is gated only at alpha = 0
+and its attacked cells record the bias breakdown ungated.  Lands under
+``feedback`` in the JSON artifact.
+
 K_* absorb the paper's universal constants; they are calibrated so a
 healthy reproduction passes with >= ~3x margin while a broken aggregator
 (errors at the scale the attacks induce through ``mean``) fails hard.
@@ -589,6 +601,187 @@ def evaluate_async(cfg: AsyncMatrixConfig = AsyncMatrixConfig(),
     return out
 
 
+# ---------------------------------------------------------- feedback cells
+#
+# Poisoned-feedback scenario cells: the serving subsystem's threat model
+# on the Proposition-1 task.  Each worker holds per-sample feedback
+# scores s in (0.7, 0.9) (0.8 + 0.1*tanh(xi) — never clipped, mean
+# exactly 0.8) that weight its regression targets, so the
+# feedback-weighted population optimum is E[s] * w* and a cell's error
+# is ||w_T - E[s] * w*||.  Byzantine shards run their score vector
+# through engine.corrupt_feedback (the exact serving code path,
+# traffic.build_round) and then compute an HONEST gradient from the
+# poisoned scores — corruption never touches the wire, matching the
+# FEEDBACK access class.  Gated like the sync grid but at the
+# score-weighted noise scale ``feedback_sigma``:
+#
+# - median / trimmed_mean below their breakdown points vs eq. (3)/(5);
+# - mean gated only at alpha = 0; under attack its stationary point is
+#   biased by ~2 * alpha * E[s] * ||w*|| (scores are bounded, so the
+#   breakdown is a visible bias, not a blow-up) — recorded ungated.
+
+
+@dataclasses.dataclass(frozen=True)
+class FeedbackMatrixConfig:
+    aggregators: Tuple[str, ...] = ("median", "trimmed_mean", "mean")
+    attacks: Tuple[Tuple[str, float], ...] = (("feedback_flip", 1.0),
+                                              ("feedback_alie", 1.5))
+    alphas: Tuple[float, ...] = (0.1, 0.25, 0.45)
+    ms: Tuple[int, ...] = (16, 32)
+    beta: float = 0.3
+    n: int = 256
+    d: int = 32
+    sigma: float = 0.5
+    score_base: float = 0.8  # E[s]: the feedback-weighted optimum scale
+    score_spread: float = 0.1  # s = base + spread * tanh(xi)
+    iters: int = 60
+    lr: float = 0.5
+    seed: int = 0
+
+
+FEEDBACK_SMOKE = FeedbackMatrixConfig(ms=(16,), n=64, d=16, iters=40)
+
+_VAR_TANH = 0.3942  # Var[tanh(xi)], xi ~ N(0, 1)
+
+
+def feedback_sigma(cfg: FeedbackMatrixConfig) -> float:
+    """Effective per-sample noise scale of the score-weighted residual
+    s*y - x'(E[s] w*): Var[(s - E[s]) x'w*] + E[s^2] sigma^2 with
+    E||w*||^2 = 1 by construction."""
+    var_s = cfg.score_spread ** 2 * _VAR_TANH
+    e_s2 = cfg.score_base ** 2 + var_s
+    return math.sqrt(var_s + e_s2 * cfg.sigma ** 2)
+
+
+def cell_bound_feedback(agg: str, alpha: float, cfg: FeedbackMatrixConfig,
+                        m: int) -> Optional[float]:
+    """Theory bound for one feedback cell at the score-weighted noise
+    scale; None = ungated (breakdown regime / attacked mean)."""
+    sig = feedback_sigma(cfg)
+    if agg == "median":
+        # gate on the REALIZED Byzantine count: alpha = 0.45 at m = 16
+        # rounds up to 8/16 — exactly at the 1/2 breakdown, no honest
+        # majority left for the coordinate-wise median
+        if 2 * math.ceil(alpha * m) >= m:
+            return None
+        return K_MEDIAN * theory.delta_median(
+            alpha, cfg.n, m, cfg.d, V=sig, S=3.0)
+    if agg == "trimmed_mean":
+        if math.ceil(alpha * m) > math.floor(cfg.beta * m):
+            return None  # beyond the breakdown point beta
+        return K_TRIMMED * theory.delta_trimmed(
+            cfg.beta, cfg.n, m, cfg.d, v=sig)
+    if agg == "mean":
+        if alpha > 0:
+            return None  # biased stationary point — reported, not gated
+        return K_MEAN * theory.lower_bound(0.0, cfg.n, m, cfg.d, sig)
+    return None
+
+
+def _make_feedback_data(cfg: FeedbackMatrixConfig, m: int):
+    kx, kn, kw, ks = jax.random.split(jax.random.PRNGKey(cfg.seed), 4)
+    x = jax.random.rademacher(kx, (m, cfg.n, cfg.d), dtype=jnp.float32)
+    w_star = jax.random.normal(kw, (cfg.d,)) / jnp.sqrt(cfg.d)
+    y = jnp.einsum("mnd,d->mn", x, w_star)
+    y = y + cfg.sigma * jax.random.normal(kn, y.shape)
+    s = cfg.score_base + cfg.score_spread * jnp.tanh(
+        jax.random.normal(ks, (m, cfg.n)))
+    return x, y, w_star, s
+
+
+def _make_feedback_cell_fn(agg_name: str, cfg: FeedbackMatrixConfig, m: int,
+                           data, counter: list):
+    """err = f(attack_idx, alpha, strength, key) for one (aggregator, m):
+    scores are poisoned ONCE per cell (feedback arrives with the traffic,
+    not per optimization step), gradients always honestly computed."""
+    x, y, w_star, s_honest = data
+    n = cfg.n
+    agg = aggregators.get_aggregator(agg_name, cfg.beta)
+    atk_specs = [engine.as_attack(name) for name, _ in cfg.attacks]
+
+    def grads_of(w, s):
+        pred = jnp.einsum("mnd,d->mn", x, w)
+        return jnp.einsum("mnd,mn->md", x, pred - s * y) / n
+
+    def cell(attack_idx, alpha, strength, key):
+        counter[0] += 1  # python side effect: executes once per TRACE
+        mask = engine.byzantine_mask(alpha, m)
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(m))
+
+        def branch_for(atk):
+            def br(_):
+                return jax.vmap(lambda s, k: engine.corrupt_feedback(
+                    atk, s, key=k, strength=strength))(s_honest, keys)
+            return br
+
+        bad = jax.lax.switch(attack_idx,
+                             [branch_for(a) for a in atk_specs], None)
+        s_used = jnp.where(mask[:, None], bad, s_honest)
+
+        def step(w, r):
+            return w - cfg.lr * agg(grads_of(w, s_used)), None
+
+        w0 = jnp.zeros_like(w_star)
+        w_fin, _ = jax.lax.scan(step, w0, jnp.arange(cfg.iters))
+        err = jnp.linalg.norm(w_fin - cfg.score_base * w_star)
+        return jnp.nan_to_num(err, nan=jnp.inf, posinf=jnp.inf)
+
+    return cell
+
+
+def evaluate_feedback(cfg: FeedbackMatrixConfig = FeedbackMatrixConfig(),
+                      verbose: bool = False) -> dict:
+    """Run the poisoned-feedback grid; same payload shape as evaluate()."""
+    counter = [0]
+    cells = []
+    for m in cfg.ms:
+        data = _make_feedback_data(cfg, m)
+        for agg_name in cfg.aggregators:
+            fn = jax.jit(jax.vmap(
+                _make_feedback_cell_fn(agg_name, cfg, m, data, counter)))
+            names, idxs, alphas, strengths = ["none"], [0], [0.0], [1.0]
+            for i, (name, s) in enumerate(cfg.attacks):
+                for a in cfg.alphas:
+                    names.append(name)
+                    idxs.append(i)
+                    alphas.append(a)
+                    strengths.append(s)
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                jax.random.PRNGKey(cfg.seed + 1), jnp.arange(len(idxs)))
+            errs = fn(jnp.asarray(idxs, jnp.int32),
+                      jnp.asarray(alphas, jnp.float32),
+                      jnp.asarray(strengths, jnp.float32), keys)
+            for name, a, s, e in zip(names, alphas, strengths, errs):
+                bound = cell_bound_feedback(agg_name, a, cfg, m)
+                err = float(e)
+                cells.append({
+                    "attack": name, "aggregator": agg_name, "alpha": a,
+                    "m": m, "strength": s, "err": err, "bound": bound,
+                    "gated": bound is not None,
+                    "ok": bound is None or err <= bound,
+                })
+    violations = [c for c in cells if not c["ok"]]
+    out = {
+        "task": "linreg-prop1-feedback",
+        "config": dataclasses.asdict(cfg),
+        "num_traces": counter[0],
+        "cells": cells,
+        "violations": violations,
+    }
+    if verbose:
+        for c in cells:
+            gate = ("VIOLATION" if not c["ok"] else
+                    f"<= {c['bound']:.3f}" if c["gated"] else
+                    "ungated" + (" (biased mean)"
+                                 if c["aggregator"] == "mean" else ""))
+            print(f"  fb   {c['aggregator']:13s} {c['attack']:15s} "
+                  f"a={c['alpha']:.2f} m={c['m']:3d} "
+                  f"err={min(c['err'], 1e9):10.4f}  [{gate}]")
+        print(f"  {len(cells)} feedback cells, {counter[0]} traces, "
+              f"{len(violations)} violations")
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.attacks.matrix",
@@ -604,21 +797,27 @@ def main(argv=None) -> int:
     cfg = SMOKE if args.smoke else MatrixConfig()
     ccfg = COMPRESSED_SMOKE if args.smoke else CompressedMatrixConfig()
     acfg = ASYNC_SMOKE if args.smoke else AsyncMatrixConfig()
+    fcfg = FEEDBACK_SMOKE if args.smoke else FeedbackMatrixConfig()
     if args.seed is not None:
         cfg = dataclasses.replace(cfg, seed=args.seed)
         ccfg = dataclasses.replace(ccfg, seed=args.seed)
         acfg = dataclasses.replace(acfg, seed=args.seed)
+        fcfg = dataclasses.replace(fcfg, seed=args.seed)
     out = evaluate(cfg, verbose=True)
     out["compressed"] = evaluate_compressed(ccfg, verbose=True)
     out["async"] = evaluate_async(acfg, verbose=True)
+    out["feedback"] = evaluate_feedback(fcfg, verbose=True)
     violations = (out["violations"] + out["compressed"]["violations"]
-                  + out["async"]["violations"])
+                  + out["async"]["violations"]
+                  + out["feedback"]["violations"])
     if args.json is not None:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.json} ({len(out['cells'])} sync + "
               f"{len(out['compressed']['cells'])} compressed + "
-              f"{len(out['async']['cells'])} async cells)", file=sys.stderr)
+              f"{len(out['async']['cells'])} async + "
+              f"{len(out['feedback']['cells'])} feedback cells)",
+              file=sys.stderr)
     if violations:
         for c in violations:
             where = (f"k={c['k']} drop={c['dropout']}" if "k" in c

@@ -79,7 +79,8 @@ def attack_table() -> str:
             f"`{a.name}`",
             a.access + (" (**adaptive**)" if a.adaptive else ""),
             ", ".join(flags) if flags else "—",
-            "—" if a.access == "data" else f"{a.strength:g}",
+            f"{a.strength:g}" if a.payload is not None
+            or a.access == "feedback" else "—",
             a.summary,
         ))
     return _md_table(

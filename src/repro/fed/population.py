@@ -70,6 +70,26 @@ class ArrivalConfig:
             raise ValueError(f"churn must be >= 0, got {self.churn}")
 
 
+def sample_latencies(key: jax.Array, n: int, acfg: ArrivalConfig) -> jax.Array:
+    """One fresh latency draw per arrival, ``(n,)`` float32.
+
+    The base draw of :meth:`ClientPopulation.arrival_times`, factored out
+    so the serving request simulator (serve/traffic.py) shares the exact
+    latency models — one arrival vocabulary for both halves of the
+    system.  Times are in arbitrary simulated units; only order and
+    window statistics matter to the consumers.
+    """
+    if acfg.latency == "zero":
+        base = jnp.zeros((n,), jnp.float32)
+    elif acfg.latency == "uniform":
+        base = acfg.scale * jax.random.uniform(key, (n,), maxval=acfg.spread)
+    elif acfg.latency == "exponential":
+        base = acfg.scale * jax.random.exponential(key, (n,))
+    else:  # lognormal — the heavy-tailed straggler regime
+        base = acfg.scale * jnp.exp(acfg.spread * jax.random.normal(key, (n,)))
+    return base.astype(jnp.float32)
+
+
 @dataclasses.dataclass(frozen=True)
 class PopulationConfig:
     num_clients: int = 100_000
@@ -215,16 +235,7 @@ class ClientPopulation:
         k-th/max statistics matter to the buffered engine."""
         n = client_ids.shape[0]
         klat, kdrop = jax.random.split(key)
-        if acfg.latency == "zero":
-            base = jnp.zeros((n,), jnp.float32)
-        elif acfg.latency == "uniform":
-            base = acfg.scale * jax.random.uniform(klat, (n,), maxval=acfg.spread)
-        elif acfg.latency == "exponential":
-            base = acfg.scale * jax.random.exponential(klat, (n,))
-        else:  # lognormal — the heavy-tailed straggler regime
-            base = acfg.scale * jnp.exp(
-                acfg.spread * jax.random.normal(klat, (n,)))
-        t = base.astype(jnp.float32) * self.client_speed(client_ids, acfg)
+        t = sample_latencies(klat, n, acfg) * self.client_speed(client_ids, acfg)
         if acfg.dropout > 0.0:
             drop = jax.random.bernoulli(kdrop, acfg.dropout, (n,))
             drop = drop & ~self.is_byzantine(client_ids)

@@ -1,8 +1,13 @@
-"""Serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving driver shim: delegates to the serving subsystem.
 
-Robust aggregation is a training-time feature; serving exercises the
-substrate (KV-cache / recurrent-state sharding) for the decode input
-shapes. Runs on the debug mesh by default.
+Historical entry point (``python -m repro.launch.serve``) kept as a thin
+argument-mapping shim over ``python -m repro.serve.run`` — the
+continuous-batching engine there subsumes the old one-shot
+prefill-then-decode loop (and fixes its use-before-definition of the
+cache length).  ``--batch`` maps to decode-pool slots and ``--gen`` to
+the per-request generation budget; traffic arrives instantaneously
+(latency "zero") so the pool fills immediately, matching the old static
+batch's shape.
 
 Example:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -12,15 +17,8 @@ Example:
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, get_smoke_config
-from repro.launch import steps
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.models import transformer as T
+from repro.serve import run as serve_run
 
 
 def main(argv=None):
@@ -35,44 +33,21 @@ def main(argv=None):
     ap.add_argument("--model-par", type=int, default=2)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.mesh == "debug":
-        mesh = make_debug_mesh(args.workers, args.model_par)
-    else:
-        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
-
-    key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
-        params = T.init_params(cfg, key)
-        pshard = steps.param_shardings(cfg, mesh)
-        params = jax.tree.map(lambda x, s: jax.device_put(x, s), params, pshard)
-        prefill = steps.make_prefill_step(cfg, mesh, kv_block=0, cache_len=total)
-        decode = steps.make_decode_step(cfg, mesh)
-
-        total = args.prompt_len + args.gen
-        prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
-        fe = None
-        if cfg.frontend != "none":
-            fe = jax.random.normal(key, (args.batch, cfg.n_frontend_tokens, cfg.d_model)
-                                   ).astype(jnp.dtype(cfg.dtype))
-
-        t0 = time.time()
-        # cache sized for prompt + generation budget
-        logits, cache = (prefill(params, prompts, fe) if fe is not None
-                         else prefill(params, prompts))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        out = [tok]
-        for i in range(args.gen - 1):
-            pos = jnp.int32(args.prompt_len + i)
-            logits, cache = decode(params, tok, cache, pos)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        gen = jnp.concatenate(out, axis=1)
-        dt = time.time() - t0
-        print(f"generated {gen.shape} in {dt:.2f}s "
-              f"({args.batch * args.gen / dt:.1f} tok/s)")
-        print("sample row 0:", gen[0].tolist())
-    return 0
+    fwd = [
+        "--arch", args.arch,
+        "--slots", str(args.batch),
+        "--prompt-len", str(args.prompt_len),
+        "--max-new", str(args.gen),
+        "--requests", str(args.batch),
+        "--latency", "zero",
+        "--adapt-every", "0",  # the legacy driver served without adaptation
+        "--mesh", args.mesh,
+        "--workers", str(args.workers),
+        "--model-par", str(args.model_par),
+    ]
+    if args.smoke:
+        fwd.append("--smoke")
+    return serve_run.main(fwd)
 
 
 if __name__ == "__main__":

@@ -583,3 +583,95 @@ def make_decode_step(cfg: ModelConfig, mesh):
         return T.decode_step(params, token, cache, pos, cfg, ctx)
 
     return jax.jit(step, donate_argnums=(2,))
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serving substrate (repro.serve)
+# ---------------------------------------------------------------------------
+
+
+def _serve_ctx(mesh) -> ShardCtx:
+    """ShardCtx of the slot-pool serving steps: no batch axes (the pool is
+    a replicated vmap over slots, not a worker-sharded batch), model axes
+    only when they can actually constrain — size-1 constraints are no-ops,
+    and without ``jax.set_mesh`` (older jax) bare-PartitionSpec constraints
+    have no mesh context to resolve against; sharding still propagates
+    from the parameter NamedShardings."""
+    shp = mesh_lib.mesh_shape_dict(mesh)
+    model_axes = mesh_lib.model_axes(mesh)
+    if all(shp.get(a, 1) == 1 for a in model_axes) or not hasattr(jax, "set_mesh"):
+        model_axes = ()
+    return ShardCtx(batch_axes=(), model_axes=model_axes, mesh_shape=shp)
+
+
+def make_slot_prefill_step(cfg: ModelConfig, mesh, cache_len: int):
+    """Batch-1 prefill at a FIXED prompt bucket -> (last-token logits
+    (1, 1, V), slot cache sized ``cache_len``).  One compilation covers
+    every admit: prompts arrive bucketed to one length and the slot cache
+    is the fixed prompt+generation budget."""
+    ctx = _serve_ctx(mesh)
+
+    def step(params, tokens, frontend=None):
+        return T.prefill(params, tokens, cfg, ctx, frontend=frontend,
+                         kv_block=0, cache_len=cache_len)
+
+    return jax.jit(step)
+
+
+def make_decode_pool_step(cfg: ModelConfig, mesh):
+    """One tick of the whole decode pool: vmapped batch-1 decode over the
+    slot axis with PER-SLOT positions (a flat batched decode cannot give
+    slots independent ring-buffer positions — ``kpos`` is shared across
+    the batch dim inside one cache).
+
+    Returns jit'd ``tick(params, tokens (S,1,1), caches, pos (S,)) ->
+    (next_tokens (S,) int32, caches)`` with the pool caches donated.
+    Idle slots decode garbage against their fully-masked caches; the
+    engine ignores their outputs and every admit REPLACES the slot's
+    cache wholesale, so stale lanes cannot leak into live ones (pinned by
+    tests/test_serve.py slot-count invariance).
+    """
+    ctx = _serve_ctx(mesh)
+
+    def one(params, token, cache, pos):
+        return T.decode_step(params, token, cache, pos, cfg, ctx)
+
+    def tick(params, tokens, caches, pos):
+        logits, new_caches = jax.vmap(one, in_axes=(None, 0, 0, 0))(
+            params, tokens, caches, pos)
+        nxt = jnp.argmax(logits[:, 0, 0, :].astype(jnp.float32), axis=-1)
+        return nxt.astype(jnp.int32), new_caches
+
+    # the pool lives replicated (the slot axis is a vmap, not a mesh
+    # axis); pinning the output keeps every tick's cache key identical
+    rep = NamedSharding(mesh, P())
+    return jax.jit(tick, donate_argnums=(2,), out_shardings=(rep, rep))
+
+
+def make_slot_admit_step(mesh=None):
+    """jit'd ``admit(pool_caches, slot_cache, slot) -> pool_caches``:
+    insert one freshly prefilled batch-1 cache at a TRACED slot index via
+    ``dynamic_update_index_in_dim`` — one compilation serves every slot
+    (the no-recompile pin), and the pool buffers are donated so slot
+    reuse is an in-place write.  With ``mesh`` the output pool is pinned
+    replicated so the updated pool's sharding matches the engine's
+    initial pool (otherwise GSPMD's choice on TP meshes forces a one-time
+    re-specialization on the second admit)."""
+
+    def admit(pool, one, slot):
+        return jax.tree.map(
+            lambda p, o: jax.lax.dynamic_update_index_in_dim(p, o, slot, 0),
+            pool, one)
+
+    kwargs = {}
+    if mesh is not None:
+        kwargs["out_shardings"] = NamedSharding(mesh, P())
+    return jax.jit(admit, donate_argnums=(0,), **kwargs)
+
+
+def init_slot_pool(cfg: ModelConfig, slots: int, cache_len: int):
+    """Empty pool caches: ``slots`` stacked batch-1 caches (leading slot
+    axis).  Fresh slots are fully masked (``kpos`` = -1 everywhere), so
+    an un-admitted lane attends to nothing."""
+    one = T.init_cache(cfg, 1, cache_len)
+    return jax.tree.map(lambda l: jnp.stack([l] * slots), one)

@@ -1,0 +1,19 @@
+"""Robust serving subsystem: continuous-batching inference whose traffic
+stream feeds Byzantine-robust continual fine-tuning.
+
+- :mod:`repro.serve.engine`  — fixed-slot continuous-batching decode pool
+  over the launch/steps.py serving substrate (prefill-on-admit, retire-on
+  EOS/length, slot reuse without recompiles, hot-swappable params).
+- :mod:`repro.serve.traffic` — seeded virtual user population (millions
+  of users mapped onto gradient shards; a Byzantine sub-population emits
+  poisoned feedback through the attacks registry's ``feedback`` access
+  class).
+- :mod:`repro.serve.adapt`   — robust continual fine-tuning: feedback
+  shards -> score-weighted local gradients -> compress -> attack ->
+  robust aggregate -> update, one rounds/engine.py round per cadence
+  window, checkpointed and hot-swapped back into the running engine.
+- ``python -m repro.serve.run`` — the CLI driver.
+"""
+from repro.serve.engine import Completed, Request, ServeConfig, ServeEngine, serve_stream  # noqa: F401
+from repro.serve.traffic import TrafficConfig, VirtualUsers  # noqa: F401
+from repro.serve.adapt import AdaptConfig, FeedbackAdapter  # noqa: F401

@@ -1,0 +1,274 @@
+"""Robust continual fine-tuning from served feedback.
+
+Every cadence window the adapter drains one fixed-shape batch of
+completed traffic per gradient shard (traffic.build_round) and runs ONE
+rounds/engine.py round over the model parameters:
+
+    feedback shards -> score-weighted local LM gradients (m, D) rows
+    -> optional wire codec (rounds.compression)
+    -> optional gradient-space attack (attacks/engine.apply_to_rows;
+       feedback attacks already corrupted the scores upstream and are a
+       no-op here, exactly the access contract)
+    -> robust aggregation (core.aggregators)
+    -> optimizer update (repro.optim)
+
+The round executes through :func:`repro.rounds.engine.make_round_body`
+— the same stage template every offline loop uses — jitted ONCE with
+the batch as a traced argument, so per-round cost is a cached executable
+call and the serving-vs-offline equivalence is bit-for-bit (the test
+drives the identical round function on identically built batches).
+
+State is the engine's :data:`RoundState` (iterate, optimizer state,
+previous aggregate, compression residual, base key, round index); after
+each round it is snapshotted via ``rounds.engine.save_snapshot`` (atomic
+LATEST) and the fresh iterate is hot-swapped into the running
+:class:`~repro.serve.engine.ServeEngine` without draining in-flight
+slots.  Restarting from the snapshot and replaying the remaining
+traffic reproduces the uninterrupted run bit-for-bit.
+
+The local gradient deliberately does NOT use layers.cross_entropy: its
+mask normalization divides by ``sum(mask)``, which breaks with negative
+feedback scores (a shard of all-negative feedback would flip the loss
+sign *and* its scale).  :func:`weighted_nll` normalizes by
+``sum(|w|)`` instead — scores scale and sign each sequence's
+contribution, the magnitude of the gradient stays comparable across
+shards regardless of score sign.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.attacks import engine as atk_engine
+from repro.configs.base import ModelConfig
+from repro.core import aggregators
+from repro.models import transformer as T
+from repro.optim.optimizers import get_optimizer
+from repro.rounds import compression as comp_lib
+from repro.rounds import engine as rounds_engine
+
+_COMP_KEY = 11  # the repo-wide compression key base (launch/steps.py)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptConfig:
+    """One continual-adaptation round's configuration."""
+
+    method: str = "median"  # robust aggregator (core.aggregators)
+    beta: float = 0.2  # trimmed-mean fraction / aggregator knob
+    optimizer: str = "sgd"
+    lr: float = 0.1
+    compression: str = "none"  # wire codec on the (m, D) gradient rows
+    batch_per_shard: int = 2  # B: completions per shard per round
+    adapt_every: int = 32  # cadence, in engine ticks
+    grad_attack: Optional[str] = None  # extra gradient-space attack
+    grad_alpha: float = 0.0  # Byzantine fraction for grad_attack
+    seed: int = 0
+
+    def __post_init__(self):
+        aggregators.get_aggregator(self.method, self.beta)  # validates
+        comp_lib.get_compression(self.compression)
+        if self.batch_per_shard < 1:
+            raise ValueError("batch_per_shard must be >= 1")
+        if self.adapt_every < 1:
+            raise ValueError("adapt_every must be >= 1")
+        if self.grad_attack is not None:
+            spec = atk_engine.as_attack(self.grad_attack)
+            if spec.access in ("data", "feedback"):
+                raise ValueError(
+                    f"grad_attack {spec.name!r} is {spec.access}-access; "
+                    "feedback corruption is configured on TrafficConfig")
+
+
+def weighted_nll(params, cfg: ModelConfig, tokens, labels, weights):
+    """Score-weighted next-token NLL over one shard's (B, L) batch.
+
+    ``weights`` carry the feedback score on response positions (zero on
+    prompt/padding).  Normalizing by ``sum(|w|)`` keeps gradient scale
+    invariant to score sign — see module docstring.
+    """
+    logits, _aux = T.forward(params, tokens, cfg, remat=False, kv_block=0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(jnp.abs(weights)), 1.0)
+    return jnp.sum(nll * weights) / denom
+
+
+def feedback_grad_rows(params, cfg: ModelConfig,
+                       batch: Dict[str, jax.Array]) -> jax.Array:
+    """Per-shard raveled gradients: (m, D) float32 rows — the transmitted
+    payload of one adaptation round."""
+
+    def one(tokens, labels, weights):
+        g = jax.grad(weighted_nll)(params, cfg, tokens, labels, weights)
+        return jax.flatten_util.ravel_pytree(g)[0].astype(jnp.float32)
+
+    return jax.vmap(one)(batch["tokens"], batch["labels"], batch["weights"])
+
+
+def make_feedback_stages(cfg: ModelConfig, acfg: AdaptConfig,
+                         batch: Dict[str, jax.Array],
+                         opt) -> rounds_engine.RoundStages:
+    """The rounds/engine stage pipeline of one adaptation round over a
+    FIXED batch (the round function traces ``batch`` as an argument, so
+    the closure here only pins shapes)."""
+    agg = aggregators.get_aggregator(acfg.method, acfg.beta)
+    spec = comp_lib.get_compression(acfg.compression)
+    m = batch["tokens"].shape[0]
+
+    def local_work(w, r):
+        return feedback_grad_rows(w, cfg, batch)
+
+    compress = None
+    if acfg.compression != "none":
+        def compress(rows, res, r):
+            key = jax.random.fold_in(jax.random.PRNGKey(_COMP_KEY), r)
+            out, new_res = comp_lib.compress_rows(
+                acfg.compression, rows,
+                key=key if (spec.randomized or spec.shared_key) else None,
+                residual=res if spec.error_feedback else None)
+            return out, (new_res if spec.error_feedback else res)
+
+    attack = None
+    if acfg.grad_attack is not None and acfg.grad_alpha > 0:
+        mask = atk_engine.byzantine_mask(acfg.grad_alpha, m)
+
+        def attack(rows, prev_agg, r):
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(acfg.seed), r)
+            return atk_engine.apply_to_rows(
+                acfg.grad_attack, rows, mask, alpha=acfg.grad_alpha,
+                key=key, prev_agg=prev_agg, rnd=r)
+
+    def aggregate(rows):
+        return agg(rows.astype(jnp.float32))
+
+    def update(w, opt_state, agg_vec, r):
+        _, unravel = jax.flatten_util.ravel_pytree(w)
+        # cast each rebuilt leaf to its param dtype: the hot-swapped
+        # iterate must keep the exact pytree struct/dtypes or every
+        # serving executable would re-specialize
+        grads = jax.tree.map(lambda g, wl: g.astype(wl.dtype),
+                             unravel(agg_vec), w)
+        return opt.update(grads, opt_state, w, r)
+
+    def emit(w_new, agg_vec):
+        return jnp.sqrt(jnp.sum(agg_vec.astype(jnp.float32) ** 2))
+
+    return rounds_engine.RoundStages(
+        local_work=local_work, aggregate=aggregate, update=update,
+        compress=compress, attack=attack, emit=emit)
+
+
+def make_round_fn(cfg: ModelConfig, acfg: AdaptConfig):
+    """jit'd ``round_fn(state, batch) -> (state, grad_norm)`` — one
+    rounds/engine round with the batch as a traced argument (one
+    compilation for the adapter's whole lifetime)."""
+    opt = get_optimizer(acfg.optimizer, acfg.lr)
+
+    def fn(state, batch):
+        stages = make_feedback_stages(
+            cfg, acfg, {k: batch[k] for k in ("tokens", "labels", "weights")},
+            opt)
+        body = rounds_engine.make_round_body(stages)
+        return body(state, state["round"])
+
+    return jax.jit(fn)
+
+
+def init_adapt_state(params, acfg: AdaptConfig,
+                     num_shards: int) -> rounds_engine.RoundState:
+    """Fresh RoundState over the model parameters: flat-vector previous
+    aggregate (the wire is (m, D) rows), per-shard compression residuals
+    for error-feedback codecs, optimizer state from repro.optim."""
+    opt = get_optimizer(acfg.optimizer, acfg.lr)
+    flat, _ = jax.flatten_util.ravel_pytree(params)
+    d = flat.shape[0]
+    comp_res = comp_lib.init_residual(
+        acfg.compression, jnp.zeros((num_shards, d), jnp.float32))
+    return rounds_engine.make_state(
+        params,
+        prev_agg=jnp.zeros((d,), jnp.float32),
+        comp_res=comp_res,
+        opt_state=opt.init(params),
+        key=jax.random.PRNGKey(acfg.seed),
+    )
+
+
+class FeedbackAdapter:
+    """Buffers served traffic per shard and fires robust rounds on cadence.
+
+    Duck-typed for :func:`repro.serve.engine.serve_stream`:
+    ``offer(Completed)`` banks a completion into its shard's buffer;
+    ``maybe_round(engine)`` fires when (a) at least ``adapt_every`` ticks
+    passed since the last round and (b) EVERY shard holds a full batch —
+    then builds the round batch, runs the jitted round, snapshots the
+    RoundState and hot-swaps the fresh iterate into the engine.
+    """
+
+    def __init__(self, cfg: ModelConfig, acfg: AdaptConfig, users,
+                 params, ckpt_dir: Optional[str] = None):
+        self.cfg = cfg
+        self.acfg = acfg
+        self.users = users
+        self.ckpt_dir = ckpt_dir
+        m = users.cfg.num_shards
+        self.buffers: List[List[Any]] = [[] for _ in range(m)]
+        self.state = init_adapt_state(params, acfg, m)
+        self._round_fn = make_round_fn(cfg, acfg)
+        self._last_round_tick = 0
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------ buffers
+
+    def offer(self, done):
+        self.buffers[done.request.shard].append(done)
+
+    def ready(self) -> bool:
+        B = self.acfg.batch_per_shard
+        return all(len(b) >= B for b in self.buffers)
+
+    def _drain(self) -> List[List[Any]]:
+        B = self.acfg.batch_per_shard
+        window = [b[:B] for b in self.buffers]
+        self.buffers = [b[B:] for b in self.buffers]
+        return window
+
+    # ------------------------------------------------------------- rounds
+
+    @property
+    def rounds_done(self) -> int:
+        return int(self.state["round"])
+
+    def run_round(self, batch: Dict[str, jax.Array]) -> Dict[str, float]:
+        """One robust adaptation round over a prebuilt batch; returns the
+        history entry.  Exposed separately so the offline-equivalence
+        test can drive the identical computation without an engine."""
+        rnd = self.rounds_done
+        self.state, grad_norm = self._round_fn(self.state, batch)
+        entry = {
+            "round": rnd,
+            "grad_norm": float(grad_norm),
+            "score_mean": float(jnp.mean(batch["scores"])),
+            "score_honest_mean": float(jnp.mean(batch["scores_honest"])),
+        }
+        self.history.append(entry)
+        if self.ckpt_dir:
+            rounds_engine.save_snapshot(self.ckpt_dir, self.state)
+        return entry
+
+    def maybe_round(self, engine) -> Optional[Dict[str, float]]:
+        if engine.tick - self._last_round_tick < self.acfg.adapt_every:
+            return None
+        if not self.ready():
+            return None
+        batch = self.users.build_round(self._drain(), self.rounds_done)
+        entry = self.run_round(batch)
+        self._last_round_tick = engine.tick
+        entry["tick"] = engine.tick
+        entry["params_version"] = engine.swap_params(self.state["w"])
+        return entry

@@ -1,0 +1,197 @@
+"""CLI for the robust serving subsystem: ``python -m repro.serve.run``.
+
+Serves a seeded simulated traffic stream through the continuous-batching
+engine while the traffic's feedback feeds Byzantine-robust continual
+fine-tuning rounds on a tick cadence, hot-swapping each fresh iterate
+into the running pool.
+
+Smoke run on the debug mesh (the CI serve smoke)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+    PYTHONPATH=src python -m repro.serve.run --smoke --arch llama3_2_3b \\
+        --workers 2 --model-par 1 --requests 24 --alpha 0.25 \\
+        --attack feedback_flip
+
+``--adapt-every 0`` disables adaptation (serve-only baseline — what the
+throughput benchmark gates the robust cadence against).  The final line
+prints ``final iterate sha256 = ...`` exactly like fed/run.py, which the
+CI serve mode compares across two identical invocations (and which the
+resume contract makes restart-invariant).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.serve.run",
+        description="Continuous-batching serving with Byzantine-robust "
+                    "continual fine-tuning from simulated user feedback")
+    p.add_argument("--arch", default="llama3_2_3b")
+    p.add_argument("--smoke", action="store_true",
+                   help="smoke-scale model config (CPU-friendly)")
+    # engine
+    p.add_argument("--slots", type=int, default=4,
+                   help="decode pool lanes (continuous batching width)")
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--eos-id", type=int, default=-1,
+                   help="retire a slot on this token (-1 = length only)")
+    p.add_argument("--window", type=int, default=64,
+                   help="metrics window in ticks")
+    # traffic
+    p.add_argument("--requests", type=int, default=32)
+    p.add_argument("--num-users", type=int, default=1_000_000)
+    p.add_argument("--shards", type=int, default=4,
+                   help="gradient shards the user population maps onto")
+    p.add_argument("--alpha", type=float, default=0.0,
+                   help="Byzantine fraction (contiguous user blocks -> "
+                        "fully-Byzantine shards)")
+    p.add_argument("--attack", default="feedback_flip",
+                   help="registered feedback-access attack")
+    p.add_argument("--strength", type=float, default=None)
+    p.add_argument("--latency", default="exponential",
+                   choices=["zero", "uniform", "exponential", "lognormal"])
+    p.add_argument("--latency-scale", type=float, default=2.0)
+    p.add_argument("--latency-spread", type=float, default=1.0)
+    # adaptation
+    p.add_argument("--adapt-every", type=int, default=32,
+                   help="robust-round cadence in ticks (0 = serve only)")
+    p.add_argument("--batch-per-shard", type=int, default=2)
+    p.add_argument("--method", default="median",
+                   help="robust aggregator (core.aggregators)")
+    p.add_argument("--beta", type=float, default=0.2)
+    p.add_argument("--optimizer", default="sgd")
+    p.add_argument("--lr", type=float, default=0.1)
+    p.add_argument("--compression", default="none",
+                   help="wire codec on the gradient rows (rounds.compression)")
+    p.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                   help="snapshot the adaptation RoundState after every "
+                        "round (rounds.engine atomic LATEST)")
+    # mesh
+    p.add_argument("--mesh", default="debug", choices=["debug", "single", "multi"])
+    p.add_argument("--workers", type=int, default=1)
+    p.add_argument("--model-par", type=int, default=1)
+    p.add_argument("--seed", type=int, default=0)
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    import contextlib
+
+    import jax
+    import jax.flatten_util
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.fed.population import ArrivalConfig
+    from repro.launch import steps
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.models import transformer as T
+    from repro.serve.adapt import AdaptConfig, FeedbackAdapter
+    from repro.serve.engine import (
+        ServeConfig, ServeEngine, latency_stats, serve_stream)
+    from repro.serve.traffic import TrafficConfig, VirtualUsers
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mesh == "debug":
+        mesh = make_debug_mesh(args.workers, args.model_par)
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    # jax.set_mesh is the newer-jax surface; constraints degrade gracefully
+    # without it (launch.steps._serve_ctx), so serving runs on both legs
+    mesh_ctx = (jax.set_mesh(mesh) if hasattr(jax, "set_mesh")
+                else contextlib.nullcontext())
+
+    scfg = ServeConfig(slots=args.slots, prompt_len=args.prompt_len,
+                       max_new=args.max_new, eos_id=args.eos_id,
+                       window=args.window)
+    tcfg = TrafficConfig(
+        num_users=args.num_users, num_shards=args.shards, alpha=args.alpha,
+        attack=args.attack, strength=args.strength,
+        prompt_len=args.prompt_len, min_gen=max(1, args.max_new // 4),
+        max_gen=args.max_new, vocab=cfg.vocab,
+        arrival=ArrivalConfig(latency=args.latency, scale=args.latency_scale,
+                              spread=args.latency_spread),
+        seed=args.seed)
+    users = VirtualUsers(tcfg)
+
+    print(f"model: {cfg.name} (vocab {cfg.vocab}); mesh {args.mesh} "
+          f"workers={args.workers} model_par={args.model_par}")
+    print(f"engine: {scfg.slots} slots, prompt bucket {scfg.prompt_len}, "
+          f"max_new {scfg.max_new} (cache {scfg.cache_len})")
+    print(f"traffic: {args.requests} requests from {tcfg.num_users} users "
+          f"over {tcfg.num_shards} shards "
+          f"({tcfg.num_byz_shards} Byzantine via {tcfg.attack!r} at "
+          f"alpha={tcfg.alpha}), latency={args.latency}")
+
+    with mesh_ctx:
+        params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+        pshard = steps.param_shardings(cfg, mesh)
+        params = jax.tree.map(jax.device_put, params, pshard)
+        engine = ServeEngine(cfg, mesh, scfg, params)
+
+        adapter = None
+        if args.adapt_every > 0:
+            acfg = AdaptConfig(
+                method=args.method, beta=args.beta,
+                optimizer=args.optimizer, lr=args.lr,
+                compression=args.compression,
+                batch_per_shard=args.batch_per_shard,
+                adapt_every=args.adapt_every, seed=args.seed)
+            adapter = FeedbackAdapter(cfg, acfg, users, params,
+                                      ckpt_dir=args.ckpt_dir)
+            print(f"adaptation: every {acfg.adapt_every} ticks, "
+                  f"B={acfg.batch_per_shard}/shard, method={acfg.method}, "
+                  f"opt={acfg.optimizer}@{acfg.lr}, "
+                  f"compression={acfg.compression}"
+                  + (f", ckpt={args.ckpt_dir}" if args.ckpt_dir else ""))
+
+        requests = users.sample_requests(args.requests)
+        completed = serve_stream(engine, requests, adapter=adapter)
+
+    for w in engine.metrics.windows:
+        print(f"  window {w['window']:3d}  {w['tokens']:5d} tok "
+              f"{w['tok_per_s']:9.1f} tok/s  occ={w['occupancy']:.2f}  "
+              f"p50={w['p50_latency']:.1f} p99={w['p99_latency']:.1f} ticks "
+              f"({w['completed']} done)")
+    stats = latency_stats(completed)
+    mt = engine.metrics
+    print(f"served {len(completed)}/{args.requests} requests, "
+          f"{mt.total_tokens} tokens in {mt.total_wall:.2f}s "
+          f"({mt.total_tokens / mt.total_wall:.1f} tok/s), "
+          f"{engine.tick} ticks")
+    print(f"latency p50={stats['p50_latency']:.1f} "
+          f"p99={stats['p99_latency']:.1f} ticks "
+          f"(queue wait p50={stats['p50_wait']:.1f} "
+          f"p99={stats['p99_wait']:.1f})")
+    print(f"no-recompile: {engine.compile_counts()}")
+    if adapter is not None:
+        for h in adapter.history:
+            print(f"  round {h['round']:3d}  |g|={h['grad_norm']:9.4f}  "
+                  f"score={h['score_mean']:+.3f} "
+                  f"(honest {h['score_honest_mean']:+.3f})")
+        print(f"adaptation rounds: {adapter.rounds_done} "
+              f"(params v{engine.params_version})")
+        w = adapter.state["w"]
+    else:
+        w = engine.params
+    flat = jax.flatten_util.ravel_pytree(w)[0]
+    print(f"final iterate sha256 = {_iterate_digest(flat)}")
+    return 0
+
+
+def _iterate_digest(w) -> str:
+    """sha256 of the served iterate's raveled bytes (fed/run.py contract:
+    the CI serve smoke compares this line bit-for-bit across runs)."""
+    import hashlib
+
+    import numpy as np
+
+    return hashlib.sha256(np.asarray(w).tobytes()).hexdigest()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,244 @@
+"""Seeded virtual user population driving the serving engine.
+
+Users are *virtual* in the fed/population.py sense: nothing per-user is
+stored — a user's prompt distribution is regenerated on demand from
+``fold_in(user_root, uid)``, so a population of millions costs nothing
+until a request samples it.  Heterogeneity: each user has a persistent
+topic center in token space and draws prompts in a narrow band around
+it, so different users produce systematically different token statistics
+(the serving analogue of per-client optimum shift).
+
+Threat-model mapping (the paper's worker pool): users map onto
+``num_shards`` gradient shards CONTIGUOUSLY — ``shard_of(uid) = uid *
+num_shards // num_users`` — and the Byzantine sub-population is the
+users of the first ``ceil(alpha * num_shards)`` shards.  An alpha
+fraction of *shards* is therefore fully Byzantine, exactly the
+Definition-1/2 setting the robust aggregators are rated against (a
+Byzantine user poisons every report of its shard, not a diluted
+fraction of every shard).
+
+Feedback: after a request completes, its user scores the response in
+[-1, 1].  Honest scores are a deterministic seeded function of the
+request id and the served response (a noisy "did it degenerate" signal:
+repetitive responses score lower).  Byzantine users' scores pass
+through the registered ``feedback``-access attack
+(attacks/engine.corrupt_feedback) when the round batch is built —
+upstream of the gradient computation, mirroring how data attacks
+corrupt samples.
+
+Arrival times reuse the fed/population.py latency vocabulary
+(:func:`repro.fed.population.sample_latencies`): inter-arrival gaps are
+drawn from the configured model and cumulatively summed, so the serving
+stream and the federated round simulator share one arrival grammar.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.attacks import base as atk_base
+from repro.attacks import engine as atk_engine
+from repro.fed.population import ArrivalConfig, sample_latencies
+from repro.serve.engine import Completed, Request
+
+_REQ_STREAM = 0x5E21E  # request-sampling stream tag
+_USER_STREAM = 0x0522  # per-user topic stream tag
+_SCORE_STREAM = 0xFEED  # feedback-noise stream tag
+_ATTACK_STREAM = 0xBAD5C02E  # feedback-corruption stream tag
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """The virtual population and its poisoned sub-population."""
+
+    num_users: int = 1_000_000
+    num_shards: int = 8
+    alpha: float = 0.0  # Byzantine fraction (of shards, via contiguous uids)
+    attack: str = "feedback_flip"  # registered feedback-access attack
+    strength: Optional[float] = None  # None = the attack's default
+    prompt_len: int = 16
+    min_gen: int = 4
+    max_gen: int = 16
+    vocab: int = 512
+    topic_spread: int = 32  # prompt band width around the user's center
+    arrival: ArrivalConfig = ArrivalConfig(latency="exponential", scale=2.0)
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.alpha < 1.0:
+            raise ValueError(f"alpha must be in [0, 1), got {self.alpha}")
+        if self.num_shards < 1 or self.num_users < self.num_shards:
+            raise ValueError(
+                f"need num_users >= num_shards >= 1, got "
+                f"{self.num_users} users / {self.num_shards} shards")
+        if not 1 <= self.min_gen <= self.max_gen:
+            raise ValueError(
+                f"need 1 <= min_gen <= max_gen, got "
+                f"[{self.min_gen}, {self.max_gen}]")
+        if self.alpha > 0.0:
+            spec = atk_engine.as_attack(self.attack)  # raises on unknown name
+            if spec.access != atk_base.FEEDBACK:
+                raise ValueError(
+                    f"traffic attack {spec.name!r} has access "
+                    f"{spec.access!r}; the serving stream only carries "
+                    "feedback-access attacks (gradient-space attacks plug "
+                    "into AdaptConfig.grad_attack instead)")
+
+    @property
+    def num_byz_shards(self) -> int:
+        if self.alpha <= 0:
+            return 0
+        return min(self.num_shards - 1,
+                   math.ceil(self.alpha * self.num_shards))
+
+    @property
+    def seq_len(self) -> int:
+        """Fixed LM training length: prompt + the largest response."""
+        return self.prompt_len + self.max_gen
+
+
+class VirtualUsers:
+    """Lazily-generated heterogeneous user population."""
+
+    def __init__(self, cfg: TrafficConfig):
+        self.cfg = cfg
+        root = jax.random.PRNGKey(cfg.seed)
+        self._req_root = jax.random.fold_in(root, _REQ_STREAM)
+        self._user_root = jax.random.fold_in(root, _USER_STREAM)
+        self._score_root = jax.random.fold_in(root, _SCORE_STREAM)
+        self._attack_root = jax.random.fold_in(root, _ATTACK_STREAM)
+
+    # ----------------------------------------------------------- identity
+
+    def shard_of(self, uid: int) -> int:
+        return uid * self.cfg.num_shards // self.cfg.num_users
+
+    def byzantine_shard(self, shard: int) -> bool:
+        return shard < self.cfg.num_byz_shards
+
+    def is_byzantine(self, uid: int) -> bool:
+        return self.byzantine_shard(self.shard_of(uid))
+
+    # ----------------------------------------------------------- requests
+
+    def sample_requests(self, num: int, *, stream: int = 0,
+                        start_time: float = 0.0) -> List[Request]:
+        """``num`` requests with cumulative-latency arrival times, sorted.
+
+        ``stream`` names an independent batch of the request process (the
+        CLI uses one stream per run segment); request ids are globally
+        unique across streams.
+        """
+        cfg = self.cfg
+        k = jax.random.fold_in(self._req_root, stream)
+        uids = jax.random.randint(
+            jax.random.fold_in(k, 1), (num,), 0, cfg.num_users)
+        gaps = sample_latencies(jax.random.fold_in(k, 2), num, cfg.arrival)
+        arrivals = start_time + jnp.cumsum(gaps)
+        gen = jax.random.randint(
+            jax.random.fold_in(k, 3), (num,), cfg.min_gen, cfg.max_gen + 1)
+        # persistent per-user topic center + per-request band noise
+        centers = jax.vmap(
+            lambda u: jax.random.randint(
+                jax.random.fold_in(self._user_root, u), (), 0, cfg.vocab)
+        )(uids)
+        noise = jax.random.randint(
+            jax.random.fold_in(k, 4), (num, cfg.prompt_len), 0,
+            max(1, cfg.topic_spread))
+        prompts = (centers[:, None] + noise) % cfg.vocab
+        uids_h = np.asarray(uids)
+        arr_h = np.asarray(arrivals, np.float64)
+        gen_h = np.asarray(gen)
+        prompts_h = np.asarray(prompts, np.int32)
+        out = [
+            Request(rid=stream * num + i, uid=int(uids_h[i]),
+                    shard=self.shard_of(int(uids_h[i])),
+                    arrival=float(arr_h[i]), prompt=prompts_h[i],
+                    gen_len=int(gen_h[i]))
+            for i in range(num)
+        ]
+        return out
+
+    # ----------------------------------------------------------- feedback
+
+    def honest_score(self, done: Completed) -> float:
+        """The user's honest rating of a served response, in [-1, 1]:
+        seeded per-request noise minus a degeneracy penalty (the fraction
+        of immediately repeated tokens — the classic greedy-loop failure
+        a feedback signal would actually punish)."""
+        xi = float(jax.random.normal(
+            jax.random.fold_in(self._score_root, done.request.rid), ()))
+        resp = done.response
+        rep = 0.0
+        if len(resp) > 1:
+            rep = float(np.mean(resp[1:] == resp[:-1]))
+        return float(np.clip(0.7 + 0.2 * math.tanh(xi) - 0.8 * rep, -1.0, 1.0))
+
+    # -------------------------------------------------------- round batch
+
+    def build_round(self, per_shard: Sequence[Sequence[Completed]],
+                    rnd: int) -> Dict[str, jax.Array]:
+        """Fixed-shape LM round batch from one cadence window's traffic.
+
+        ``per_shard``: ``num_shards`` lists of exactly B completions each.
+        Returns ``{"tokens", "labels", "weights"}`` shaped (m, B, L) plus
+        the per-sequence ``scores``/``scores_honest`` (m, B) for
+        observability.  Labels are next-token targets over the
+        concatenated (prompt, response) sequence; ``weights`` carry the
+        (possibly corrupted) feedback score on exactly the response
+        positions, zero elsewhere — so the local gradient of
+        adapt.weighted_nll is the score-weighted response log-likelihood
+        gradient of this shard's served traffic.
+
+        Byzantine shards' score VECTORS pass through the configured
+        feedback attack with a per-(round, shard) folded key — the
+        corruption is deterministic in (seed, round) exactly like every
+        other per-round draw in the repo (the resume pins rely on it).
+        """
+        cfg = self.cfg
+        m = cfg.num_shards
+        if len(per_shard) != m:
+            raise ValueError(f"expected {m} shards, got {len(per_shard)}")
+        B = len(per_shard[0])
+        if any(len(sh) != B for sh in per_shard):
+            raise ValueError("all shards must contribute the same batch size")
+        L = cfg.seq_len
+        P = cfg.prompt_len
+        tokens = np.zeros((m, B, L), np.int32)
+        labels = np.zeros((m, B, L), np.int32)
+        wpos = np.zeros((m, B, L), np.float32)  # response-position mask
+        honest = np.zeros((m, B), np.float32)
+        for s, shard in enumerate(per_shard):
+            for b, done in enumerate(shard):
+                seq = np.concatenate([done.request.prompt, done.response])
+                seq = np.pad(seq, (0, L + 1 - len(seq)))
+                tokens[s, b] = seq[:L]
+                labels[s, b] = seq[1 : L + 1]
+                g = len(done.response)
+                # positions predicting response tokens: P-1 .. P+g-2
+                wpos[s, b, P - 1 : P + g - 1] = 1.0
+                honest[s, b] = self.honest_score(done)
+        scores = jnp.asarray(honest)
+        q = cfg.num_byz_shards
+        if q > 0:
+            atk = atk_engine.as_attack(cfg.attack)
+            corrupted = []
+            for s in range(q):
+                key = jax.random.fold_in(self._attack_root, rnd * m + s)
+                corrupted.append(atk_engine.corrupt_feedback(
+                    atk, scores[s], key=key, strength=cfg.strength))
+            scores = jnp.concatenate(
+                [jnp.stack(corrupted), scores[q:]], axis=0)
+        weights = jnp.asarray(wpos) * scores[:, :, None]
+        return {
+            "tokens": jnp.asarray(tokens),
+            "labels": jnp.asarray(labels),
+            "weights": weights.astype(jnp.float32),
+            "scores": scores,
+            "scores_honest": jnp.asarray(honest),
+        }

@@ -35,9 +35,11 @@ KEY = jax.random.PRNGKey(0)
 ROWS = jnp.asarray(np.random.default_rng(0).standard_normal((M, D)), jnp.float32)
 MASK = engine.byzantine_mask(0.25, M)
 GRAD_ATTACKS = [n for n in attacks.registered() if
-                attacks.get_attack(n).access != base.DATA]
+                attacks.get_attack(n).access not in (base.DATA, base.FEEDBACK)]
 DATA_ATTACKS = [n for n in attacks.registered() if
                 attacks.get_attack(n).access == base.DATA]
+FEEDBACK_ATTACKS = [n for n in attacks.registered() if
+                    attacks.get_attack(n).access == base.FEEDBACK]
 
 
 def _payload(name, strength=None, key=KEY, rows=ROWS, mask=MASK, prev=None):
@@ -94,7 +96,13 @@ def test_context_filter_matches_declared_access(name):
     assert (ctx.honest_mean is not None) == (rank >= base.access_rank(base.STATS))
     assert (ctx.rows is not None) == (rank >= base.access_rank(base.OMNISCIENT))
     assert (ctx.mask is not None) == (rank >= base.access_rank(base.OMNISCIENT))
-    if atk.access == base.DATA:
+    if atk.access == base.FEEDBACK:
+        s = jnp.linspace(-0.8, 0.9, 8)
+        out = engine.corrupt_feedback(atk, s, KEY)
+        assert out.shape == s.shape
+        assert float(jnp.max(jnp.abs(out))) <= 1.0 + 1e-6
+        assert not np.allclose(np.asarray(out), np.asarray(s))
+    elif atk.access == base.DATA:
         y = jnp.arange(8) % 10
         out = engine.corrupt_labels(atk, y, KEY, 10)
         assert out.shape == y.shape

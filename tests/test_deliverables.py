@@ -56,7 +56,8 @@ def test_docs_exist_and_reference_sections():
                       "Training harness", "device_steps", "§Compression",
                       "Error feedback", "post-decode",
                       "§Round engine", "RoundState", "Resume determinism",
-                      "bit-for-bit"],
+                      "bit-for-bit", "§Serving", "continuous batching",
+                      "hot-swap", "Poisoned feedback"],
         "EXPERIMENTS.md": ["§Dry-run", "§Roofline", "§Perf", "hypothesis",
                            "§Communication", "§Asynchronous",
                            "§Training throughput", "BENCH_train.json",
@@ -66,7 +67,9 @@ def test_docs_exist_and_reference_sections():
                       "repro.launch.train", "--device-steps",
                       "--compression", "Payload compression",
                       "--ckpt-dir", "--resume", "checkpoint/resume",
-                      "final iterate sha256"],
+                      "final iterate sha256",
+                      "repro.serve.run", "--adapt-every", "feedback_flip",
+                      "BENCH_serve.json"],
     }.items():
         path = os.path.join(ROOT, name)
         assert os.path.exists(path), name
@@ -143,6 +146,55 @@ def test_committed_robustness_has_compressed_cells():
     for c in cells:
         assert c["ok"], c
         assert (c["bound"] is not None) == c["gated"], c
+
+
+def test_committed_robustness_has_feedback_cells():
+    """The committed ROBUSTNESS.json must carry the poisoned-feedback
+    serving grid: both feedback attacks appear, every gated cell passes
+    its score-weighted bound, attacked plain-mean cells are reported
+    ungated (biased stationary point), and the recorded breakdown is
+    visible — the attacked mean is strictly worse than the gated median
+    at the same (alpha, m) under the flip attack."""
+    path = os.path.join(ROOT, "ROBUSTNESS.json")
+    with open(path) as f:
+        payload = json.load(f)
+    fb = payload["feedback"]
+    assert fb["violations"] == []
+    cells = fb["cells"]
+    assert {c["attack"] for c in cells} >= {"feedback_flip", "feedback_alie"}
+    for c in cells:
+        assert c["ok"], c
+        assert (c["bound"] is not None) == c["gated"], c
+    mean_attacked = [c for c in cells
+                     if c["aggregator"] == "mean" and c["alpha"] > 0]
+    assert mean_attacked and all(not c["gated"] for c in mean_attacked)
+    median = {(c["alpha"], c["m"]): c for c in cells
+              if c["aggregator"] == "median" and c["gated"]
+              and c["attack"] == "feedback_flip"}
+    compared = 0
+    for c in mean_attacked:
+        mc = median.get((c["alpha"], c["m"]))
+        if c["attack"] == "feedback_flip" and mc is not None:
+            assert c["err"] > mc["err"], (c, mc)
+            compared += 1
+    assert compared > 0
+
+
+def test_committed_serve_bench_gate():
+    """The committed BENCH_serve.json must pass the <15% robust-cadence
+    overhead gate at its largest slot count, and every recorded cell
+    must have served without a mid-stream recompile."""
+    path = os.path.join(ROOT, "BENCH_serve.json")
+    assert os.path.exists(path), "committed BENCH_serve.json missing"
+    with open(path) as f:
+        payload = json.load(f)
+    from benchmarks.serve_throughput import gate_from_records
+
+    g = gate_from_records(payload["records"])
+    assert g["ok"], g
+    for r in payload["records"]:
+        if r.get("status") == "ok":
+            assert r["no_recompile"], r
 
 
 def test_committed_comm_grid_has_compression_axis():

@@ -1,0 +1,338 @@
+"""Serving subsystem tests (DESIGN.md §Serving + continual adaptation).
+
+Pins the ISSUE acceptance contracts of the continuous-batching engine
+and its robust continual fine-tuning loop:
+
+- slot-count invariance: a request's greedy tokens are a pure function
+  of (params, prompt) — bitwise identical across pool sizes, and equal
+  to a batch-1 prefill+decode reference outside the pool;
+- no-recompile: prefill/decode/admit each hold exactly ONE lowered
+  executable across admits, retires, slot reuse, and hot-swaps;
+- hot-swap + snapshot bit-equality: after adaptation the engine serves
+  exactly the adapter's iterate, and the atomic-LATEST snapshot restores
+  it bit-for-bit;
+- serving round == offline round: the rounds fired inside serve_stream
+  reproduce bit-for-bit when the identical batches are driven through
+  the rounds/engine round function without an engine;
+- restart-from-snapshot replay: resuming from a mid-run snapshot and
+  replaying the remaining round batches lands on the uninterrupted
+  run's final iterate digest;
+- CLI end-to-end: ``python -m repro.serve.run`` on a 2-worker debug
+  mesh (subprocess — in-process tests stay on the default single
+  device, per the conftest contract).
+
+Everything here runs on both jax legs: the engine degrades gracefully
+without jax.set_mesh (launch/steps._serve_ctx), so no version guards.
+"""
+import dataclasses
+import hashlib
+import os
+import subprocess
+import sys
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.fed.population import ArrivalConfig
+from repro.launch import steps
+from repro.launch.mesh import make_debug_mesh
+from repro.models import transformer as T
+from repro.rounds import engine as rounds_engine
+from repro.serve.adapt import AdaptConfig, FeedbackAdapter, init_adapt_state
+from repro.serve.engine import (
+    Completed, Request, ServeConfig, ServeEngine, serve_stream)
+from repro.serve.traffic import TrafficConfig, VirtualUsers
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCFG = ServeConfig(slots=3, prompt_len=8, max_new=6, window=16)
+
+
+def _tiny_cfg():
+    # further-shrunk smoke model: the contracts here are structural
+    # (bitwise equality, executable counts), not capacity-dependent
+    return dataclasses.replace(
+        get_smoke_config("llama3_2_3b"), name="serve-test",
+        n_layers=1, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=128)
+
+
+def _tcfg(cfg, alpha=0.0, shards=2, latency="zero", seed=0):
+    return TrafficConfig(
+        num_users=64, num_shards=shards, alpha=alpha,
+        attack="feedback_flip", prompt_len=SCFG.prompt_len,
+        min_gen=1, max_gen=SCFG.max_new, vocab=cfg.vocab,
+        arrival=ArrivalConfig(latency=latency, scale=2.0), seed=seed)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _tiny_cfg()
+    mesh = make_debug_mesh(1, 1)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, mesh, params
+
+
+def _assert_trees_bitwise(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)),
+        a, b)
+
+
+def _digest(w) -> str:
+    flat = jax.flatten_util.ravel_pytree(w)[0]
+    return hashlib.sha256(np.asarray(flat).tobytes()).hexdigest()
+
+
+class _RecordingUsers(VirtualUsers):
+    """VirtualUsers that records every round batch it builds, so the
+    offline-equivalence tests can replay the identical inputs."""
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self.batches = []
+
+    def build_round(self, per_shard, rnd):
+        batch = super().build_round(per_shard, rnd)
+        self.batches.append(batch)
+        return batch
+
+
+# ---------------------------------------------------------------- engine
+
+
+def test_slot_count_invariant_tokens(setup):
+    """The same request stream produces bitwise-identical responses on a
+    1-slot and a 3-slot pool: greedy tokens depend only on
+    (params, prompt), never on slot placement or co-resident lanes."""
+    cfg, mesh, params = setup
+    users = VirtualUsers(_tcfg(cfg))
+    reqs = users.sample_requests(8)
+    responses = {}
+    for slots in (1, 3):
+        engine = ServeEngine(
+            cfg, mesh, dataclasses.replace(SCFG, slots=slots), params)
+        done = serve_stream(engine, reqs)
+        assert len(done) == len(reqs)
+        responses[slots] = {c.request.rid: c.response for c in done}
+    assert responses[1].keys() == responses[3].keys()
+    for rid in responses[1]:
+        np.testing.assert_array_equal(responses[1][rid], responses[3][rid])
+
+
+def test_engine_matches_batch1_reference(setup):
+    """Pool-served tokens equal a batch-1 prefill + decode_step loop run
+    OUTSIDE the pool — the admit splice and per-slot positions are
+    transparent to the computation."""
+    cfg, mesh, params = setup
+    users = VirtualUsers(_tcfg(cfg))
+    reqs = users.sample_requests(4)
+    engine = ServeEngine(cfg, mesh, SCFG, params)
+    done = serve_stream(engine, reqs)
+    prefill = steps.make_slot_prefill_step(cfg, mesh, SCFG.cache_len)
+    ctx = steps._serve_ctx(mesh)
+    for c in done:
+        req = c.request
+        logits, cache = prefill(
+            engine.params, jnp.asarray(req.prompt, jnp.int32)[None])
+        tok = int(jnp.argmax(logits[0, -1].astype(jnp.float32)))
+        toks, pos = [tok], SCFG.prompt_len
+        while len(toks) < req.gen_len:
+            logits, cache = T.decode_step(
+                engine.params, jnp.asarray([[tok]], jnp.int32), cache,
+                jnp.int32(pos), cfg, ctx)
+            tok = int(jnp.argmax(logits[0, 0].astype(jnp.float32)))
+            toks.append(tok)
+            pos += 1
+        np.testing.assert_array_equal(c.response, np.asarray(toks, np.int32))
+
+
+def test_no_recompile_across_admits_retires_and_swaps(setup):
+    """Each serving step holds exactly ONE lowered executable for the
+    engine's whole lifetime — across admits to different slots, retires,
+    slot reuse, a hot-swap, and a second stream."""
+    cfg, mesh, params = setup
+    engine = ServeEngine(cfg, mesh, SCFG, params)
+    users = VirtualUsers(_tcfg(cfg, latency="exponential"))
+    done = serve_stream(engine, users.sample_requests(10))
+    assert len(done) == 10
+    bumped = jax.tree.map(lambda w: w + jnp.ones((), w.dtype), engine.params)
+    assert engine.swap_params(bumped) == 1
+    done2 = serve_stream(engine, users.sample_requests(6, stream=1))
+    assert len(done2) == 6
+    assert engine.compile_counts() == {"prefill": 1, "decode": 1, "admit": 1}
+    assert all(c.params_version == 1 for c in done2)
+
+
+def test_single_token_budget_completes_at_admit(setup):
+    """gen_len == 1 retires at admission without entering the pool."""
+    cfg, mesh, params = setup
+    engine = ServeEngine(cfg, mesh, SCFG, params)
+    req = Request(rid=0, uid=0, shard=0, arrival=0.0,
+                  prompt=np.zeros((SCFG.prompt_len,), np.int32), gen_len=1)
+    done = engine.admit(0, req)
+    assert done is not None
+    assert done.response.shape == (1,)
+    assert engine.num_active() == 0
+
+
+# ------------------------------------------------------------ adaptation
+
+
+def test_hot_swap_and_snapshot_bit_equality(setup, tmp_path):
+    """After serving with adaptation: the engine's params ARE the
+    adapter's iterate leaf-for-leaf, every round hot-swapped exactly
+    once, and the atomic-LATEST snapshot restores the RoundState
+    bit-for-bit."""
+    cfg, mesh, params = setup
+    tcfg = _tcfg(cfg, alpha=0.5, shards=2)
+    users = VirtualUsers(tcfg)
+    acfg = AdaptConfig(adapt_every=4, batch_per_shard=1)
+    adapter = FeedbackAdapter(cfg, acfg, users, params,
+                              ckpt_dir=str(tmp_path))
+    engine = ServeEngine(cfg, mesh, SCFG, params)
+    serve_stream(engine, users.sample_requests(16), adapter=adapter)
+    assert adapter.rounds_done >= 1
+    assert engine.params_version == adapter.rounds_done
+    _assert_trees_bitwise(engine.params, adapter.state["w"])
+    assert rounds_engine.latest_round(str(tmp_path)) == adapter.rounds_done
+    like = init_adapt_state(params, acfg, tcfg.num_shards)
+    restored, _host = rounds_engine.load_snapshot(str(tmp_path), like)
+    assert int(restored["round"]) == adapter.rounds_done
+    _assert_trees_bitwise(restored["w"], adapter.state["w"])
+
+
+def test_serving_round_equals_offline_round(setup):
+    """The robust rounds fired inside serve_stream reproduce bit-for-bit
+    when the identical batches drive the identical rounds/engine round
+    function WITHOUT an engine (the serving-vs-offline equivalence of
+    DESIGN.md §Serving)."""
+    cfg, mesh, params = setup
+    tcfg = _tcfg(cfg, alpha=0.5, shards=2)
+    users = _RecordingUsers(tcfg)
+    acfg = AdaptConfig(adapt_every=4, batch_per_shard=1)
+    online = FeedbackAdapter(cfg, acfg, users, params)
+    engine = ServeEngine(cfg, mesh, SCFG, params)
+    serve_stream(engine, users.sample_requests(16), adapter=online)
+    assert len(users.batches) == online.rounds_done >= 1
+
+    offline = FeedbackAdapter(cfg, acfg, VirtualUsers(tcfg), params)
+    for batch in users.batches:
+        offline.run_round(batch)
+    _assert_trees_bitwise(online.state, offline.state)
+    assert ([h["grad_norm"] for h in online.history]
+            == [h["grad_norm"] for h in offline.history])
+
+
+def test_restart_from_snapshot_replays_bit_for_bit(setup, tmp_path):
+    """Kill-and-resume: restoring the round-1 snapshot and replaying the
+    remaining round batches lands on the uninterrupted run's final
+    iterate digest (the rounds.engine resume contract, through the
+    serving adapter)."""
+    cfg, mesh, params = setup
+    tcfg = _tcfg(cfg, alpha=0.5, shards=2)
+    users = _RecordingUsers(tcfg)
+    acfg = AdaptConfig(adapt_every=3, batch_per_shard=1)
+    full = FeedbackAdapter(cfg, acfg, users, params,
+                           ckpt_dir=str(tmp_path / "ck"))
+    engine = ServeEngine(cfg, mesh, SCFG, params)
+    serve_stream(engine, users.sample_requests(20), adapter=full)
+    assert full.rounds_done >= 2
+
+    like = init_adapt_state(params, acfg, tcfg.num_shards)
+    state, _host = rounds_engine.load_snapshot(str(tmp_path / "ck"), like,
+                                               rnd=1)
+    resumed = FeedbackAdapter(cfg, acfg, VirtualUsers(tcfg), params)
+    resumed.state = state
+    for batch in users.batches[1:]:
+        resumed.run_round(batch)
+    assert resumed.rounds_done == full.rounds_done
+    assert _digest(resumed.state["w"]) == _digest(full.state["w"])
+
+
+# --------------------------------------------------------------- traffic
+
+
+def _fake_completions(users, m, B, gen=3):
+    per_shard = []
+    rid = 0
+    for s in range(m):
+        row = []
+        for _ in range(B):
+            req = Request(rid=rid, uid=s * 16, shard=s, arrival=0.0,
+                          prompt=np.zeros((users.cfg.prompt_len,), np.int32),
+                          gen_len=gen)
+            row.append(Completed(request=req,
+                                 response=np.arange(gen, dtype=np.int32),
+                                 admitted=0, finished=gen, params_version=0))
+            rid += 1
+        per_shard.append(row)
+    return per_shard
+
+
+@pytest.mark.fast
+def test_traffic_shard_mapping_and_corruption():
+    """Contiguous uid->shard mapping, the first ceil(alpha*m) shards
+    Byzantine, and build_round corrupting EXACTLY those shards' scores —
+    deterministically per (seed, round)."""
+    cfg = TrafficConfig(
+        num_users=100, num_shards=4, alpha=0.3, attack="feedback_flip",
+        prompt_len=8, min_gen=1, max_gen=6, vocab=128,
+        arrival=ArrivalConfig(latency="zero"), seed=3)
+    users = VirtualUsers(cfg)
+    shards = [users.shard_of(u) for u in range(cfg.num_users)]
+    assert shards == sorted(shards)
+    assert set(shards) == set(range(4))
+    q = cfg.num_byz_shards
+    assert q == 2  # ceil(0.3 * 4)
+    assert [users.byzantine_shard(s) for s in range(4)] == [True, True,
+                                                            False, False]
+
+    per_shard = _fake_completions(users, m=4, B=2)
+    b1 = users.build_round(per_shard, rnd=0)
+    scores, honest = np.asarray(b1["scores"]), np.asarray(b1["scores_honest"])
+    assert scores.shape == honest.shape == (4, 2)
+    np.testing.assert_array_equal(scores[q:], honest[q:])
+    assert not np.array_equal(scores[:q], honest[:q])
+    # a fresh population rebuilds the same round identically (flip is a
+    # deterministic function of the honest scores; the per-(round, shard)
+    # key only feeds randomized attacks)
+    b2 = VirtualUsers(cfg).build_round(per_shard, rnd=0)
+    np.testing.assert_array_equal(scores, np.asarray(b2["scores"]))
+    # weights carry scores on response positions only
+    w = np.asarray(b1["weights"])
+    P = cfg.prompt_len
+    np.testing.assert_array_equal(w[..., : P - 1], 0.0)
+    np.testing.assert_allclose(w[..., P - 1], scores, rtol=1e-6)
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def test_cli_end_to_end_two_workers(tmp_path):
+    """The serve CLI end-to-end on a 2-worker debug mesh: serves every
+    request, fires robust rounds from poisoned feedback, keeps the
+    no-recompile contract, and prints the iterate digest line the CI
+    serve smoke diffs (subprocess: in-process tests stay single-device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [sys.executable, "-m", "repro.serve.run", "--smoke",
+           "--arch", "llama3_2_3b", "--workers", "2", "--requests", "12",
+           "--slots", "2", "--shards", "2", "--num-users", "200",
+           "--alpha", "0.5", "--attack", "feedback_flip",
+           "--adapt-every", "6", "--batch-per-shard", "1",
+           "--method", "median", "--latency", "zero",
+           "--ckpt-dir", str(tmp_path / "ck")]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "served 12/12 requests" in r.stdout
+    assert "no-recompile: {'prefill': 1, 'decode': 1, 'admit': 1}" in r.stdout
+    assert "final iterate sha256 = " in r.stdout
